@@ -1,0 +1,59 @@
+"""Fig 4a: HBM-PS op time distribution — pull/push vs train compute.
+
+The paper's finding: pull/push scales with #nonzeros per example, train
+scales with the dense-tower size. We time the three device phases (working-
+row gather, scatter-accumulate, dense fwd/bwd) for models with 100 vs 500
+nnz and different towers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, emit, note, time_call
+from repro.configs.ctr_models import SCALED
+from repro.kernels import ref as kref
+from repro.models import ctr as ctr_model
+from repro.train.optim import AdamW
+
+
+def main() -> None:
+    note("Fig 4a: device-phase times (gather 'pull' / scatter 'push' / train)")
+    models = ["A", "C"] if QUICK else ["A", "B", "C", "D", "E"]
+    B = 2048
+    for tag in models:
+        cfg = SCALED[tag]
+        n_working = min(cfg.n_sparse_keys, B * cfg.nnz_per_example)
+        key = jax.random.PRNGKey(0)
+        table = jax.random.normal(key, (n_working, cfg.emb_dim))
+        ids = jax.random.randint(key, (B, cfg.nnz_per_example), 0, n_working)
+        slot_of = jax.random.randint(key, (B, cfg.nnz_per_example), 0, cfg.n_slots)
+        valid = jnp.ones((B, cfg.nnz_per_example), bool)
+        labels = jnp.asarray(np.random.default_rng(0).integers(0, 2, B).astype(np.float32))
+        tower = ctr_model.init_tower(cfg, key)
+
+        pull = jax.jit(lambda t, i: jnp.take(t, i.reshape(-1), axis=0))
+        grads = jax.random.normal(key, (B * cfg.nnz_per_example, cfg.emb_dim))
+        push = jax.jit(lambda t, i, g: t.at[i.reshape(-1)].add(g))
+        train = jax.jit(
+            jax.grad(
+                lambda tw, tb: ctr_model.loss_fn(cfg, tw, tb, ids, slot_of, valid, labels),
+                argnums=(0, 1),
+            )
+        )
+
+        t_pull = time_call(lambda: jax.block_until_ready(pull(table, ids)))
+        t_push = time_call(lambda: jax.block_until_ready(push(table, ids, grads)))
+        t_train = time_call(lambda: jax.block_until_ready(train(tower, table)))
+        tot = t_pull + t_push + t_train
+        emit(
+            f"fig4a.{tag}",
+            tot * 1e6,
+            f"pull={t_pull/tot*100:.0f}% push={t_push/tot*100:.0f}% train={t_train/tot*100:.0f}% nnz={cfg.nnz_per_example}",
+        )
+
+
+if __name__ == "__main__":
+    main()

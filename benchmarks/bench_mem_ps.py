@@ -1,0 +1,46 @@
+"""Fig 4b: MEM-PS local vs remote parameter pulls over 1/2/4 nodes.
+
+Reproduces the paper's observation that total pull time stays roughly flat
+with node count: local SSD work shrinks ~1/N while remote requests grow,
+and the two run in parallel. Remote time includes the simulated 100Gb NIC.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit, note
+from repro.core.node import Cluster, NetworkModel
+from repro.data.synthetic_ctr import SyntheticCTRStream
+
+
+def main() -> None:
+    note("Fig 4b: local/remote pull split vs node count (model E scaled)")
+    n_keys, nnz, batch = 400_000, 100, 2048
+    n_batches = 4 if QUICK else 8
+    for n_nodes in (1, 2, 4):
+        with tempfile.TemporaryDirectory() as tmp:
+            cl = Cluster(
+                n_nodes, tmp, dim=16,
+                cache_capacity=60_000, file_capacity=4096,
+                network=NetworkModel(),
+            )
+            stream = SyntheticCTRStream(n_keys, nnz, 32, batch, seed=0)
+            for _ in range(n_batches):
+                b = stream.next_batch()
+                uniq = np.unique(b.keys)
+                cl.pull(uniq, requester=0, pin=False)
+            total = cl.pull_local_time + cl.pull_remote_time + cl.network.virtual_time
+            emit(
+                f"fig4b.nodes{n_nodes}",
+                total / n_batches * 1e6,
+                f"local_s={cl.pull_local_time:.3f} remote_s={cl.pull_remote_time:.3f} "
+                f"nic_virtual_s={cl.network.virtual_time:.4f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig 3c: per-stage time distribution across model scales A-E.
+
+Reproduces the paper's observation: small models are read-bound (HDFS);
+as the sparse side grows, pull/push overtakes and dominates.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import QUICK, emit, note
+from repro.configs.ctr_models import SCALED
+from repro.core.node import Cluster
+from repro.data.synthetic_ctr import SyntheticCTRStream
+from repro.train.trainer import CTRTrainer, TrainerConfig
+
+
+def main() -> None:
+    note("Fig 3c: pipeline stage time distribution (scaled models)")
+    n = 6 if QUICK else 10
+    models = ["A", "C"] if QUICK else ["A", "B", "C", "D", "E"]
+    with tempfile.TemporaryDirectory() as tmp:
+        for tag in models:
+            cfg = SCALED[tag]
+            working_bound = min(cfg.n_sparse_keys, cfg.batch_size * cfg.nnz_per_example)
+            cl = Cluster(
+                2, f"{tmp}/{tag}", dim=cfg.emb_dim * 2,
+                cache_capacity=2 * working_bound,
+                file_capacity=4096, init_cols=cfg.emb_dim,
+            )
+            tr = CTRTrainer(cfg, cl, TrainerConfig())
+            stream = SyntheticCTRStream(
+                cfg.n_sparse_keys, cfg.nnz_per_example, cfg.n_slots, cfg.batch_size, seed=0
+            )
+            tr.run(stream, 2)  # warm
+            tr.run(stream, n)
+            rep = tr.last_pipeline.report()
+            total = sum(v["busy_s"] for v in rep.values()) + 1e-12
+            split = " ".join(
+                f"{k}={v['busy_s'] / total * 100:.0f}%" for k, v in rep.items()
+            )
+            bottleneck = tr.last_pipeline.bottleneck()
+            emit(
+                f"fig3c.{tag}",
+                rep["train"]["mean_s"] * 1e6,
+                f"{split} bottleneck={bottleneck}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing, AUC, CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (the harness contract)
+plus human-readable context lines prefixed with '#'.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def note(msg: str) -> None:
+    print(f"# {msg}")
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn(*args)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+from repro.metrics import auc  # noqa: F401  (re-export for benches)

@@ -1,0 +1,46 @@
+"""Benchmark harness: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
+Set BENCH_QUICK=1 for a fast pass.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_hashing",  # Tables 1-2
+    "benchmarks.bench_pipeline_speedup",  # Table 4 / Fig 3a
+    "benchmarks.bench_time_distribution",  # Fig 3c
+    "benchmarks.bench_hbm_ps",  # Fig 4a
+    "benchmarks.bench_mem_ps",  # Fig 4b
+    "benchmarks.bench_cache",  # Fig 4c
+    "benchmarks.bench_ssd",  # Fig 5a
+    "benchmarks.bench_scalability",  # Fig 5b
+    "benchmarks.bench_kernels",  # kernel layer
+]
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"# FAILED {mod_name}")
+        print(f"# {mod_name} done in {time.perf_counter() - t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

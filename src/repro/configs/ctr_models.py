@@ -1,0 +1,85 @@
+"""The paper's own CTR prediction models A-E (Table 3), plus scaled variants.
+
+Paper Table 3:
+  model  #nnz/example  #sparse      #dense   size    MPI nodes
+  A      100           8e9          7e5      300 GB  100
+  B      100           2e10         2e4      600 GB  80
+  C      500           6e10         2e6      2 TB    75
+  D      500           1e11         4e6      6 TB    150
+  E      500           2e11         7e6      10 TB   128
+
+The ``paper`` configs carry those numbers for roofline math; the ``scaled``
+configs shrink the key space so the full hierarchical-PS workflow (SSD files,
+cache, compaction) runs on this container while keeping the *structure*
+(nnz/example ratios, dense-net shapes, zipfian key popularity) identical.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class CTRConfig:
+    name: str
+    n_sparse_keys: int  # size of the sparse key space (rows that exist)
+    nnz_per_example: int  # non-zero features per example
+    emb_dim: int  # embedding width per sparse feature
+    n_slots: int  # feature slots; nnz are spread across slots & sum-pooled
+    mlp_hidden: tuple[int, ...]  # fully-connected tower
+    batch_size: int  # examples per training batch ("HDFS batch")
+    minibatches_per_batch: int  # GPU mini-batches per pulled working set
+    zipf_a: float = 1.05  # key popularity skew (cache-ability)
+
+    @property
+    def dense_params(self) -> int:
+        dims = (self.n_slots * self.emb_dim,) + self.mlp_hidden + (1,)
+        return sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+
+    @property
+    def sparse_params(self) -> int:
+        return self.n_sparse_keys * self.emb_dim
+
+
+def _scale(name: str, keys: int, nnz: int, hidden: tuple[int, ...], batch: int) -> CTRConfig:
+    return CTRConfig(
+        name=name,
+        n_sparse_keys=keys,
+        nnz_per_example=nnz,
+        emb_dim=8,
+        n_slots=max(8, nnz // 4),
+        mlp_hidden=hidden,
+        batch_size=batch,
+        minibatches_per_batch=4,
+    )
+
+
+# --- paper-spec configs (used for analytic/roofline math; never allocated) ---
+PAPER = {
+    "A": CTRConfig("ctr-A", 8 * 10**9, 100, 8, 32, (511, 255, 127), 4_000_000, 1000),
+    "B": CTRConfig("ctr-B", 2 * 10**10, 100, 8, 32, (96, 64, 32), 4_000_000, 1000),
+    "C": CTRConfig("ctr-C", 6 * 10**10, 500, 8, 128, (859, 430, 215), 4_000_000, 1000),
+    "D": CTRConfig("ctr-D", 1 * 10**11, 500, 8, 128, (1330, 660, 330), 4_000_000, 1000),
+    "E": CTRConfig("ctr-E", 2 * 10**11, 500, 8, 128, (1840, 920, 460), 4_000_000, 1000),
+}
+
+# --- container-scale configs (run the real workflow end-to-end) ---
+SCALED = {
+    "A": _scale("ctr-A-scaled", 80_000, 100, (64, 32), 4096),
+    "B": _scale("ctr-B-scaled", 200_000, 100, (32, 16), 4096),
+    "C": _scale("ctr-C-scaled", 600_000, 500, (96, 48), 2048),
+    "D": _scale("ctr-D-scaled", 1_000_000, 500, (128, 64), 2048),
+    "E": _scale("ctr-E-scaled", 2_000_000, 500, (160, 80), 2048),
+}
+
+# a tiny config for unit tests
+TINY = CTRConfig(
+    name="ctr-tiny",
+    n_sparse_keys=1_000,
+    nnz_per_example=16,
+    emb_dim=4,
+    n_slots=8,
+    mlp_hidden=(16, 8),
+    batch_size=64,
+    minibatches_per_batch=2,
+)

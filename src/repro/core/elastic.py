@@ -1,0 +1,55 @@
+"""Elastic scaling: reshard a PS cluster from N to M nodes.
+
+At 1000+ node scale, node counts change (failures, preemption, scale-up).
+Key ownership is ``hash(key) % n_nodes``, so a change of n_nodes remaps
+roughly (1 - 1/max(N, M)) of keys. Resharding streams each node's live rows
+file-by-file (sequential reads), repartitions them by the new owner map, and
+writes them into fresh SSD-PS shards — the same file-granularity sequential
+I/O discipline the paper uses for updates.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.keys import key_to_node
+from repro.core.node import Cluster, NetworkModel
+
+
+def reshard(cluster: Cluster, new_n_nodes: int, new_base_dir: str) -> Cluster:
+    """Build a new cluster with ``new_n_nodes`` holding the same live rows."""
+    cluster.flush_all()
+    new = Cluster(
+        new_n_nodes,
+        new_base_dir,
+        cluster.dim,
+        cache_capacity=cluster.nodes[0].mem.capacity,
+        file_capacity=cluster.nodes[0].ssd.file_capacity,
+        network=NetworkModel(
+            latency_s=cluster.network.latency_s,
+            bandwidth_gbps=cluster.network.bandwidth_gbps,
+        ),
+    )
+    # stage rows per new owner so each write is one (or few) sequential files
+    staged_keys: list[list[np.ndarray]] = [[] for _ in range(new_n_nodes)]
+    staged_vals: list[list[np.ndarray]] = [[] for _ in range(new_n_nodes)]
+    for node in cluster.nodes:
+        if not node.alive:
+            continue
+        for keys, vals in node.ssd.iter_live():
+            owners = key_to_node(keys, new_n_nodes)
+            for dst in range(new_n_nodes):
+                mask = owners == dst
+                if mask.any():
+                    staged_keys[dst].append(keys[mask])
+                    staged_vals[dst].append(vals[mask])
+                    if dst != node.node_id:  # data actually moves
+                        new.network.transfer(int(mask.sum()) * (8 + 4 * cluster.dim))
+    for dst in range(new_n_nodes):
+        if staged_keys[dst]:
+            k = np.concatenate(staged_keys[dst])
+            v = np.concatenate(staged_vals[dst])
+            new.nodes[dst].ssd.write_batch(k, v)
+    return new

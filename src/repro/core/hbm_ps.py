@@ -1,0 +1,152 @@
+"""HBM-PS: the device-resident working-parameter table (paper Section 4).
+
+TPU adaptation of the multi-GPU distributed hash table (see DESIGN.md §3):
+the MEM-PS renumbers the batch's unique keys to contiguous *working slots*
+[0, n_working); the device table is then a dense ``[n_working, dim]`` matrix
+and the hash-table ops become:
+
+  get(slots)               -> gather              (Pallas embedding_lookup)
+  accumulate(slots, vals)  -> scatter-add         (Pallas scatter_add)
+  insert(slots, vals)      -> scatter-write
+
+Distribution across the ``model`` mesh axis mirrors the paper's per-GPU
+modulo partition: slot s lives on shard ``s % n_shards`` at local row
+``s // n_shards``. Two exchange strategies are provided:
+
+* ``gather_psum`` — each shard contributes its owned rows, one ``psum``
+  assembles the full row set on every shard (paper's all-reduce-style sync;
+  2(S-1)/S * B * dim bytes per link).
+* ``gather_a2a`` — requests routed to owners and rows routed back with two
+  ``all_to_all`` ops (paper's NVLink p2p ``get``; B * dim * (S-1)/S bytes),
+  requires per-shard request lists of equal size (host pads).
+
+``accumulate`` in the distributed setting reduces gradient rows across the
+data axis (``psum``) and each shard applies only its owned rows — the same
+"synchronize after every mini-batch" semantics as Algorithm 1 line 14.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.kernels import ops as kops
+
+
+# --------------------------------------------------------------------------
+# single-device working table (used inside one jitted train step)
+# --------------------------------------------------------------------------
+
+
+class WorkingTable:
+    """Dense device working table with hash-table semantics."""
+
+    @staticmethod
+    def get(table: jax.Array, slots: jax.Array) -> jax.Array:
+        return kops.embedding_lookup(table, slots)
+
+    @staticmethod
+    def accumulate(table: jax.Array, slots: jax.Array, values: jax.Array) -> jax.Array:
+        return kops.scatter_add(table, slots, values)
+
+    @staticmethod
+    def insert(table: jax.Array, slots: jax.Array, values: jax.Array) -> jax.Array:
+        return table.at[slots].set(values.astype(table.dtype))
+
+
+# --------------------------------------------------------------------------
+# sharded working table over the `model` mesh axis
+# --------------------------------------------------------------------------
+
+
+def shard_layout(n_working: int, n_shards: int) -> int:
+    """Rows per shard after padding (slot s -> shard s % S, row s // S)."""
+    return (n_working + n_shards - 1) // n_shards
+
+
+def to_sharded_rows(values: np.ndarray, n_shards: int) -> np.ndarray:
+    """Host-side: [n_working, d] -> [S * rows_per_shard, d] padded, where the
+    shard-major layout matches the device partition (shard = slot % S)."""
+    n, d = values.shape
+    rps = shard_layout(n, n_shards)
+    out = np.zeros((n_shards * rps, d), dtype=values.dtype)
+    for s in range(n_shards):
+        rows = values[s::n_shards]
+        out[s * rps : s * rps + len(rows)] = rows
+    return out
+
+
+def from_sharded_rows(sharded: np.ndarray, n_working: int, n_shards: int) -> np.ndarray:
+    n, d = n_working, sharded.shape[1]
+    rps = shard_layout(n, n_shards)
+    out = np.zeros((n, d), dtype=sharded.dtype)
+    for s in range(n_shards):
+        take = len(out[s::n_shards])
+        out[s::n_shards] = sharded[s * rps : s * rps + take]
+    return out
+
+
+class ShardedWorkingTable:
+    """Working table sharded over a mesh axis with explicit collectives."""
+
+    def __init__(self, mesh: Mesh, axis: str = "model"):
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = mesh.shape[axis]
+        self.table_spec = P(axis, None)  # [S * rows_per_shard, d] row-sharded
+
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.table_spec)
+
+    # -- psum exchange: every shard ends with all requested rows -----------
+    def get_psum(self, table: jax.Array, slots: jax.Array) -> jax.Array:
+        """table: [S*rps, d] sharded on axis; slots: [B] replicated ->
+        [B, d] replicated."""
+        S = self.n_shards
+        rps = table.shape[0] // S
+
+        def body(tbl, sl):
+            # tbl: local [rps, d]; sl: [B] (replicated)
+            me = jax.lax.axis_index(self.axis)
+            owned = (sl % S) == me
+            local_row = jnp.where(owned, sl // S, 0)
+            rows = kops.embedding_lookup(tbl, local_row.astype(jnp.int32))
+            rows = jnp.where(owned[:, None], rows, 0.0)
+            return jax.lax.psum(rows, self.axis)
+
+        spec_rest = [a for a in self.mesh.axis_names if a != self.axis]
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self.table_spec, P()),
+            out_specs=P(),
+            check_rep=False,
+        )(table, slots)
+
+    # -- accumulate: grads for all B slots -> owned rows only --------------
+    def accumulate(self, table: jax.Array, slots: jax.Array, grads: jax.Array) -> jax.Array:
+        """grads: [B, d] replicated (already summed over data axis);
+        each shard applies its owned rows."""
+        S = self.n_shards
+
+        def body(tbl, sl, g):
+            me = jax.lax.axis_index(self.axis)
+            owned = (sl % S) == me
+            local_row = jnp.where(owned, sl // S, tbl.shape[0] - 1)
+            g = jnp.where(owned[:, None], g, 0.0)
+            # rows not owned scatter zeros into the last row: harmless
+            return kops.scatter_add(tbl, local_row.astype(jnp.int32), g)
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self.table_spec, P(), P()),
+            out_specs=self.table_spec,
+            check_rep=False,
+        )(table, slots, grads)

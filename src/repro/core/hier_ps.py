@@ -1,0 +1,93 @@
+"""Hierarchical parameter server orchestrator — Algorithm 1 of the paper.
+
+Per training batch:
+
+  1. identify the union of referenced sparse keys (dedup);
+  2. pull their rows from the cluster (local MEM-PS/SSD-PS + remote MEM-PS),
+     pinning them for the duration of the batch;
+  3. renumber keys to contiguous *working slots* and hand a dense working
+     table (+ per-row optimizer state) to the device step;
+  4. after the device finishes its mini-batches, push the updated rows back
+     to their owner nodes and unpin.
+
+The SSD row layout packs ``[embedding | optimizer slots]`` in one value so a
+key's full training state moves through MEM-PS/SSD-PS as one fixed-size row
+(the paper's fixed-size-value design).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.node import Cluster
+
+
+@dataclass
+class WorkingSet:
+    """The device-ready working parameters of one batch."""
+
+    keys: np.ndarray  # uint64 [n_working] — unique referenced keys
+    params: np.ndarray  # float32 [n_working, emb_dim]
+    opt_state: np.ndarray  # float32 [n_working, opt_dim]
+    slots: np.ndarray  # int32, same shape as the batch's key tensor
+    batch_id: int
+
+    @property
+    def n_working(self) -> int:
+        return len(self.keys)
+
+
+class HierarchicalPS:
+    """Host-side orchestrator over a PS cluster."""
+
+    def __init__(self, cluster: Cluster, emb_dim: int, opt_dim: int = 0):
+        self.cluster = cluster
+        self.emb_dim = emb_dim
+        self.opt_dim = opt_dim
+        assert cluster.dim == emb_dim + opt_dim, (
+            f"cluster value dim {cluster.dim} != emb {emb_dim} + opt {opt_dim}"
+        )
+        self._batch_counter = 0
+
+    # ----------------------------------------------------------- pull side
+    def prepare_batch(self, batch_keys: np.ndarray, requester: int = 0) -> WorkingSet:
+        """batch_keys: any-shape uint64 tensor of referenced keys (padded
+        entries may use key 0 — slot 0 then maps to key 0's row, which is
+        fine: its update contribution is masked out by the model)."""
+        flat = np.asarray(batch_keys, dtype=np.uint64).reshape(-1)
+        uniq, inverse = np.unique(flat, return_inverse=True)
+        rows = self.cluster.pull(uniq, requester=requester, pin=True)
+        ws = WorkingSet(
+            keys=uniq,
+            params=rows[:, : self.emb_dim].copy(),
+            opt_state=rows[:, self.emb_dim :].copy(),
+            slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
+            batch_id=self._batch_counter,
+        )
+        self._batch_counter += 1
+        return ws
+
+    # ----------------------------------------------------------- push side
+    def complete_batch(
+        self,
+        ws: WorkingSet,
+        new_params: np.ndarray,
+        new_opt_state: np.ndarray | None = None,
+        requester: int = 0,
+    ) -> None:
+        rows = np.empty((ws.n_working, self.cluster.dim), dtype=np.float32)
+        rows[:, : self.emb_dim] = new_params
+        rows[:, self.emb_dim :] = (
+            new_opt_state if new_opt_state is not None else ws.opt_state
+        )
+        self.cluster.push(ws.keys, rows, requester=requester, unpin=True)
+
+    def abort_batch(self, ws: WorkingSet) -> None:
+        """Unpin without applying (failure path)."""
+        owners = self.cluster.owner_of(ws.keys)
+        for node_id in range(self.cluster.n_nodes):
+            mask = owners == node_id
+            if mask.any() and self.cluster.nodes[node_id].alive:
+                self.cluster.nodes[node_id].mem.unpin(ws.keys[mask])

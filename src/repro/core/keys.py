@@ -1,0 +1,74 @@
+"""Key hashing / partitioning for the hierarchical parameter server.
+
+Parameters are identified by 64-bit keys. The paper partitions keys across
+nodes and across GPUs with modulo hashing ("the features of the input
+training data are usually distributed randomly"). We hash with splitmix64
+first so that *any* key distribution partitions evenly, then take the modulo.
+All functions are vectorized over numpy uint64 arrays and deterministic —
+determinism matters: missing-key initialization is derived from the key so
+that the hierarchical-PS path and the flat in-memory path train identically
+(the paper's "lossless" property becomes an exact, testable invariant).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+_U64 = np.uint64
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Bijective 64-bit finalizer (vectorized). Input/output uint64."""
+    x = np.asarray(x, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = x + _GOLDEN
+        z = (z ^ (z >> _U64(30))) * _MIX1
+        z = (z ^ (z >> _U64(27))) * _MIX2
+        z = z ^ (z >> _U64(31))
+    return z
+
+
+def hash_keys(keys: np.ndarray, seed: int = 0) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        return splitmix64(np.asarray(keys, dtype=np.uint64) ^ _U64(seed))
+
+
+def key_to_node(keys: np.ndarray, n_nodes: int, seed: int = 1) -> np.ndarray:
+    """Owner node of each key (paper: modulo partitioning across MEM-PS)."""
+    return (hash_keys(keys, seed) % _U64(n_nodes)).astype(np.int64)
+
+
+def key_to_shard(keys: np.ndarray, n_shards: int, seed: int = 2) -> np.ndarray:
+    """Owner device shard within the HBM-PS (paper: per-GPU partition)."""
+    return (hash_keys(keys, seed) % _U64(n_shards)).astype(np.int64)
+
+
+def deterministic_init(keys: np.ndarray, dim: int, scale: float = 0.01, seed: int = 3) -> np.ndarray:
+    """Per-key deterministic pseudo-random init, vectorized.
+
+    Row i is a function of keys[i] only — independent of read order, node
+    count, or cache state. Values ~ scale * U(-1, 1) per component.
+    """
+    keys = np.asarray(keys, dtype=np.uint64)
+    cols = np.arange(dim, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        grid = hash_keys(keys, seed)[:, None] * _GOLDEN + cols[None, :] * _MIX1
+        bits = splitmix64(grid)
+    u = (bits >> _U64(11)).astype(np.float64) * (1.0 / (1 << 53))  # [0,1)
+    return ((u * 2.0 - 1.0) * scale).astype(np.float32)
+
+
+def partition_by_owner(keys: np.ndarray, owners: np.ndarray, n_owners: int):
+    """Group ``keys`` by owner id.
+
+    Returns (order, splits) such that keys[order] is owner-sorted and
+    np.split(keys[order], splits) yields one array per owner. ``order`` lets
+    callers scatter per-owner results back into request order.
+    """
+    order = np.argsort(owners, kind="stable")
+    counts = np.bincount(owners, minlength=n_owners)
+    splits = np.cumsum(counts)[:-1]
+    return order, splits

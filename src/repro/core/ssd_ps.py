@@ -1,0 +1,284 @@
+"""SSD-PS: log-structured, file-granularity parameter store (paper Section 6).
+
+Design points taken directly from the paper / Appendix E:
+
+* Parameters are grouped into immutable **parameter files**; a file is the
+  SSD I/O unit. Reading any requested key reads its whole file (bandwidth
+  over random access; file size is tunable).
+* Updates are **never in-place**: updated rows are chunked and written
+  sequentially as *new* files; the in-memory parameter->file mapping is then
+  repointed and the old copies become stale.
+* Each file keeps a **stale counter** (maintained on mapping updates, no file
+  reads needed). A background/regular **compaction** merges files whose stale
+  fraction exceeds 50%, which bounds total disk usage at <= 2x live bytes
+  (1/0.5), plus one in-flight write batch.
+* The key->file map lives in memory (a descriptor is a few bytes/key; a node
+  only holds its key shard).
+
+Values are float32 rows of fixed width ``dim`` (embedding row [+ optimizer
+slots] — exactly the paper's fixed-size-value observation that lets the
+serialized bucket fit SSD blocks with no I/O amplification).
+
+File layout (little-endian): header  <u32 magic, u32 n_rows, u32 dim>
+followed by n_rows u64 keys then n_rows*dim f32 values.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.keys import deterministic_init
+
+_MAGIC = 0x55D9A5
+_HEADER = struct.Struct("<III")
+
+
+@dataclass
+class FileMeta:
+    file_id: int
+    path: str
+    n_rows: int
+    n_stale: int = 0
+
+    @property
+    def stale_frac(self) -> float:
+        return self.n_stale / max(1, self.n_rows)
+
+
+@dataclass
+class SSDStats:
+    bytes_written: int = 0
+    bytes_read: int = 0
+    rows_read: int = 0
+    rows_requested: int = 0
+    files_written: int = 0
+    files_read: int = 0
+    compactions: int = 0
+    compaction_time: float = 0.0
+    read_time: float = 0.0
+    write_time: float = 0.0
+
+    @property
+    def read_amplification(self) -> float:
+        """rows read from disk / rows actually requested (paper's I/O amp)."""
+        return self.rows_read / max(1, self.rows_requested)
+
+
+class SSDParameterServer:
+    """One node's materialized parameter shard on local SSD."""
+
+    def __init__(
+        self,
+        directory: str,
+        dim: int,
+        file_capacity: int = 4096,
+        compact_stale_frac: float = 0.5,
+        init_scale: float = 0.01,
+        init_cols: int | None = None,
+        auto_compact: bool = True,
+        lock: bool = True,
+    ):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.dim = dim
+        self.file_capacity = int(file_capacity)
+        self.compact_stale_frac = float(compact_stale_frac)
+        self.init_scale = init_scale
+        # rows for unseen keys: random-init the first init_cols columns
+        # (embedding), zero the rest (optimizer slots ride along in the row)
+        self.init_cols = dim if init_cols is None else int(init_cols)
+        self.auto_compact = auto_compact
+        self._next_file_id = 0
+        self.files: dict[int, FileMeta] = {}
+        # key -> (file_id, row_in_file)
+        self.key_to_file: dict[int, tuple[int, int]] = {}
+        self.stats = SSDStats()
+        self._lock = threading.RLock() if lock else threading.RLock()
+
+    # ------------------------------------------------------------------ io
+    def _file_path(self, file_id: int) -> str:
+        return os.path.join(self.dir, f"params_{file_id:08d}.bin")
+
+    def _write_file(self, keys: np.ndarray, values: np.ndarray) -> int:
+        fid = self._next_file_id
+        self._next_file_id += 1
+        path = self._file_path(fid)
+        t0 = time.perf_counter()
+        with open(path, "wb") as f:
+            f.write(_HEADER.pack(_MAGIC, len(keys), self.dim))
+            f.write(np.ascontiguousarray(keys, dtype=np.uint64).tobytes())
+            f.write(np.ascontiguousarray(values, dtype=np.float32).tobytes())
+        self.stats.write_time += time.perf_counter() - t0
+        nbytes = _HEADER.size + keys.nbytes + values.nbytes
+        self.stats.bytes_written += nbytes
+        self.stats.files_written += 1
+        self.files[fid] = FileMeta(fid, path, len(keys))
+        return fid
+
+    def _read_file(self, fid: int) -> tuple[np.ndarray, np.ndarray]:
+        meta = self.files[fid]
+        t0 = time.perf_counter()
+        with open(meta.path, "rb") as f:
+            magic, n_rows, dim = _HEADER.unpack(f.read(_HEADER.size))
+            assert magic == _MAGIC and dim == self.dim, "corrupt parameter file"
+            keys = np.frombuffer(f.read(8 * n_rows), dtype=np.uint64)
+            values = np.frombuffer(f.read(4 * n_rows * dim), dtype=np.float32)
+        self.stats.read_time += time.perf_counter() - t0
+        self.stats.bytes_read += _HEADER.size + keys.nbytes + values.nbytes
+        self.stats.files_read += 1
+        self.stats.rows_read += n_rows
+        return keys, values.reshape(n_rows, dim)
+
+    # ------------------------------------------------------------ interface
+    def write_batch(self, keys: np.ndarray, values: np.ndarray) -> None:
+        """Dump updated rows as new sequential files (paper: never in-place)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        values = np.asarray(values, dtype=np.float32)
+        assert values.shape == (len(keys), self.dim)
+        if len(keys) == 0:
+            return
+        with self._lock:
+            for start in range(0, len(keys), self.file_capacity):
+                sl = slice(start, start + self.file_capacity)
+                k, v = keys[sl], values[sl]
+                fid = self._write_file(k, v)
+                # repoint mapping; old copies become stale
+                for row, key in enumerate(k.tolist()):
+                    old = self.key_to_file.get(key)
+                    if old is not None:
+                        self.files[old[0]].n_stale += 1
+                    self.key_to_file[key] = (fid, row)
+            if self.auto_compact:
+                self.compact()
+
+    def read_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Gather rows for ``keys``; whole-file reads; missing keys get the
+        deterministic per-key initialization (fresh parameters)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        out = np.empty((len(keys), self.dim), dtype=np.float32)
+        with self._lock:
+            self.stats.rows_requested += len(keys)
+            by_file: dict[int, list[int]] = {}
+            missing: list[int] = []
+            locs = [self.key_to_file.get(int(k)) for k in keys]
+            for i, loc in enumerate(locs):
+                if loc is None:
+                    missing.append(i)
+                else:
+                    by_file.setdefault(loc[0], []).append(i)
+            for fid, idxs in by_file.items():
+                _, vals = self._read_file(fid)  # file = I/O unit
+                rows = np.fromiter((locs[i][1] for i in idxs), dtype=np.int64)
+                out[np.asarray(idxs, dtype=np.int64)] = vals[rows]
+            if missing:
+                midx = np.asarray(missing, dtype=np.int64)
+                fresh = np.zeros((len(midx), self.dim), dtype=np.float32)
+                fresh[:, : self.init_cols] = deterministic_init(
+                    keys[midx], self.init_cols, self.init_scale
+                )
+                out[midx] = fresh
+        return out
+
+    def contains(self, key: int) -> bool:
+        return int(key) in self.key_to_file
+
+    # ---------------------------------------------------------- compaction
+    def compact(self, force: bool = False) -> int:
+        """Merge files whose stale fraction exceeds the threshold.
+
+        Returns number of files merged. Only >50%-stale files are eligible
+        (paper threshold), bounding disk usage at <=2x live rows.
+        """
+        with self._lock:
+            victims = [
+                m
+                for m in self.files.values()
+                if m.n_rows > 0 and (force or m.stale_frac > self.compact_stale_frac) and m.n_stale > 0
+            ]
+            if not victims:
+                return 0
+            t0 = time.perf_counter()
+            live_keys: list[np.ndarray] = []
+            live_vals: list[np.ndarray] = []
+            for meta in victims:
+                fkeys, fvals = self._read_file(meta.file_id)
+                mask = np.fromiter(
+                    (self.key_to_file.get(int(k)) == (meta.file_id, r) for r, k in enumerate(fkeys)),
+                    dtype=bool,
+                    count=len(fkeys),
+                )
+                if mask.any():
+                    live_keys.append(fkeys[mask])
+                    live_vals.append(fvals[mask])
+            # write survivors as fresh files and erase victims
+            if live_keys:
+                all_k = np.concatenate(live_keys)
+                all_v = np.concatenate(live_vals)
+                for start in range(0, len(all_k), self.file_capacity):
+                    sl = slice(start, start + self.file_capacity)
+                    k, v = all_k[sl], all_v[sl]
+                    fid = self._write_file(k, v)
+                    for row, key in enumerate(k.tolist()):
+                        self.key_to_file[key] = (fid, row)
+            for meta in victims:
+                os.remove(meta.path)
+                del self.files[meta.file_id]
+            self.stats.compactions += 1
+            self.stats.compaction_time += time.perf_counter() - t0
+            return len(victims)
+
+    # -------------------------------------------------------------- info
+    @property
+    def n_live_rows(self) -> int:
+        return len(self.key_to_file)
+
+    @property
+    def n_disk_rows(self) -> int:
+        return sum(m.n_rows for m in self.files.values())
+
+    @property
+    def disk_bytes(self) -> int:
+        return sum(_HEADER.size + m.n_rows * (8 + 4 * self.dim) for m in self.files.values())
+
+    def space_amplification(self) -> float:
+        return self.n_disk_rows / max(1, self.n_live_rows)
+
+    # ------------------------------------------------------- checkpointing
+    def manifest(self) -> dict:
+        return {
+            "dim": self.dim,
+            "file_capacity": self.file_capacity,
+            "next_file_id": self._next_file_id,
+            "files": {fid: (m.path, m.n_rows, m.n_stale) for fid, m in self.files.items()},
+            "key_to_file": dict(self.key_to_file),
+        }
+
+    @classmethod
+    def from_manifest(cls, directory: str, manifest: dict, **kw) -> "SSDParameterServer":
+        ps = cls(directory, manifest["dim"], manifest["file_capacity"], **kw)
+        ps._next_file_id = manifest["next_file_id"]
+        ps.files = {
+            int(fid): FileMeta(int(fid), path, n_rows, n_stale)
+            for fid, (path, n_rows, n_stale) in manifest["files"].items()
+        }
+        ps.key_to_file = {int(k): (int(f), int(r)) for k, (f, r) in manifest["key_to_file"].items()}
+        return ps
+
+    def iter_live(self, chunk: int = 65536):
+        """Yield (keys, values) over all live rows (for reshard/checkpoint)."""
+        with self._lock:
+            for fid in list(self.files):
+                fkeys, fvals = self._read_file(fid)
+                mask = np.fromiter(
+                    (self.key_to_file.get(int(k)) == (fid, r) for r, k in enumerate(fkeys)),
+                    dtype=bool,
+                    count=len(fkeys),
+                )
+                if mask.any():
+                    yield fkeys[mask], fvals[mask]

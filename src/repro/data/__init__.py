@@ -1,0 +1,4 @@
+from repro.data.synthetic_ctr import CTRBatch, SyntheticCTRStream
+from repro.data.tokens import TokenStream
+
+__all__ = ["CTRBatch", "SyntheticCTRStream", "TokenStream"]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: grouped matmul (megablox-lite) for MoE expert compute.
+
+Tokens arrive sorted by expert (rows grouped contiguously); each row block
+multiplies its group's expert weight matrix:
+
+    out[t] = x[t] @ w[group_of(t)]
+
+The wrapper pads every group to a multiple of ``block_t`` so a row tile
+never straddles two experts; the per-tile group id arrives via scalar
+prefetch and selects the weight block in the BlockSpec index_map — the
+weight matrix streams HBM->VMEM only for tiles that actually use it.
+
+Grid: (T_padded/block_t, N/block_n, K/block_k) with a VMEM f32 accumulator
+(K innermost, MXU-aligned 128x128x128 default tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(gid_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ik == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "block_k", "interpret"))
+def gmm_pallas(
+    x: jax.Array,  # [T, K] rows sorted by group; T % block_t == 0
+    w: jax.Array,  # [E, K, N]
+    tile_gid: jax.Array,  # [T // block_t] int32 group id per row tile
+    *,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    T, K = x.shape
+    E, _, N = w.shape
+    bt, bn, bk = min(block_t, T), min(block_n, N), min(block_k, K)
+    assert T % bt == 0 and N % bn == 0 and K % bk == 0
+    grid = (T // bt, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, n_k=K // bk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, bk), lambda i, j, k, gid: (i, k)),
+                pl.BlockSpec((1, bk, bn), lambda i, j, k, gid: (gid[i], k, j)),
+            ],
+            out_specs=pl.BlockSpec((bt, bn), lambda i, j, k, gid: (i, j)),
+            scratch_shapes=[pltpu.MemorySpace.VMEM((bt, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, N), x.dtype),
+        interpret=interpret,
+    )(tile_gid.astype(jnp.int32), x, w)

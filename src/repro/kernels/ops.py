@@ -1,0 +1,331 @@
+"""Public jit'd wrappers over the Pallas kernels, with portable fallbacks.
+
+Dispatch policy: the TPU kernels are the *target*; on this CPU container they
+run under ``interpret=True`` (tests) while production code paths call the
+portable implementations that lower on any backend with the same math:
+
+* ``embedding_lookup`` / ``scatter_add`` / ``adagrad_update`` — jnp gather /
+  sorted-segment add / fused arithmetic (XLA fuses these well on TPU too;
+  the Pallas versions additionally avoid touching non-working rows).
+* ``attention`` — ``impl='flash'`` (Pallas kernel, recompute-vjp),
+  ``'blockwise'`` (lax.scan streaming softmax: O(S*block) memory, compiles
+  everywhere — what the multi-pod dry-run lowers), ``'naive'`` (materializes
+  scores; small shapes / decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.embedding_lookup import embedding_lookup_pallas
+from repro.kernels.fused_adagrad import adagrad_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.scatter_add import scatter_add_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# §Perf toggles (beyond-paper optimizations; see EXPERIMENTS.md).
+# RECOMPUTE_ATTN: recompute-vjp attention — backward re-runs the streaming
+#   softmax instead of storing per-KV-block (s, p) scan residuals. Dominant
+#   memory-term win for long-sequence training.
+# BANDED_WINDOW: sliding-window attention as banded chunks (q chunk attends
+#   its [2W] neighborhood) instead of masking every KV block — cuts window
+#   attention FLOPs and bytes by ~S/(2W).
+RECOMPUTE_ATTN = True
+BANDED_WINDOW = True
+
+
+# --------------------------------------------------------------------------
+# embedding lookup / scatter / optimizer
+# --------------------------------------------------------------------------
+
+
+def embedding_lookup(table, ids, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return embedding_lookup_pallas(table, ids, interpret=not _on_tpu() if interpret is None else interpret)
+    return _ref.embedding_lookup_ref(table, ids)
+
+
+def scatter_add(table, ids, grads, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        order = jnp.argsort(ids)  # duplicates must be consecutive for the kernel
+        return scatter_add_pallas(
+            table,
+            ids[order],
+            grads[order],
+            interpret=not _on_tpu() if interpret is None else interpret,
+        )
+    return _ref.scatter_add_ref(table, ids, grads)
+
+
+def adagrad_update(params, accum, grads, lr, *, eps: float = 1e-8, use_pallas: bool | None = None, interpret: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas and params.shape[0] % 8 == 0 and params.shape[1] % 128 == 0:
+        return adagrad_pallas(
+            params, accum, grads, lr, eps=eps,
+            interpret=not _on_tpu() if interpret is None else interpret,
+        )
+    return _ref.adagrad_ref(params, accum, grads, lr, eps)
+
+
+# --------------------------------------------------------------------------
+# grouped matmul (MoE expert compute)
+# --------------------------------------------------------------------------
+
+
+def gmm(x, w, group_sizes, *, block_t: int = 128, use_pallas: bool | None = None, interpret: bool | None = None):
+    """Grouped matmul: rows of ``x`` are contiguous groups (sorted by
+    expert); row t multiplies ``w[group_of(t)]``.
+
+    The Pallas path pads each group to a ``block_t`` multiple (tiles never
+    straddle experts) and streams only the weights each tile needs.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return _ref.gmm_ref(x, w, group_sizes)
+    from repro.kernels.moe_gmm import gmm_pallas
+
+    T, K = x.shape
+    E = w.shape[0]
+    padded = ((group_sizes + block_t - 1) // block_t) * block_t  # per group
+    offs = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+    Tp = int(T + E * (block_t - 1) + block_t - 1) // block_t * block_t  # static bound
+    # scatter rows into their padded positions
+    gid_of_row = jnp.searchsorted(jnp.cumsum(group_sizes), jnp.arange(T), side="right")
+    dst = offs[gid_of_row] + (jnp.arange(T) - starts[gid_of_row])
+    xp = jnp.zeros((Tp, K), x.dtype).at[dst].set(x)
+    tile_gid = jnp.clip(
+        jnp.searchsorted(jnp.cumsum(padded), jnp.arange(Tp // block_t) * block_t, side="right"),
+        0, E - 1,
+    )
+    out_p = gmm_pallas(
+        xp, w, tile_gid,
+        block_t=block_t,
+        interpret=not _on_tpu() if interpret is None else interpret,
+    )
+    return jnp.take(out_p, dst, axis=0)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def attention_blockwise(
+    q: jax.Array,  # [B, H, Sq, Dh]
+    k: jax.Array,  # [B, Hkv, Skv, Dh]
+    v: jax.Array,  # [B, Hkv, Skv, Dh]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+    kv_len: int | jax.Array | None = None,
+    block_k: int = 512,
+) -> jax.Array:
+    """Streaming-softmax attention via lax.scan over KV blocks.
+
+    Memory O(Sq * block_k) instead of O(Sq * Skv); differentiable; lowers on
+    any backend. GQA handled without materializing repeated KV.
+    """
+    B, H, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    rep = H // Hkv
+    bk = min(block_k, Skv)
+    if Skv % bk != 0:  # pad K/V to a block multiple; padded keys masked out
+        pad = bk - Skv % bk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_len is None:
+            kv_len = Skv
+        Skv = Skv + pad
+    nk = Skv // bk
+    scale = 1.0 / (Dh**0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, rep, Sq, Dh)
+    kb = k.astype(jnp.float32).reshape(B, Hkv, nk, bk, Dh).transpose(2, 0, 1, 3, 4)
+    vb = v.astype(jnp.float32).reshape(B, Hkv, nk, bk, Dh).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, jk = inputs  # [B,Hkv,bk,Dh], [B,Hkv,bk,Dh], scalar
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qf, kblk) * scale
+        k_pos = jk * bk + jnp.arange(bk)
+        mask = jnp.ones((Sq, bk), dtype=bool)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos[None, :] > q_pos[:, None] - window)
+        if kv_len is not None:
+            mask = jnp.logical_and(mask, (k_pos[None, :] < kv_len))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard -inf - -inf for fully masked rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bgrqk,bgkd->bgrqd", p, vblk)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, rep, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, jnp.arange(nk)))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, H, Sq, Dh)
+    return out.astype(q.dtype)
+
+
+def attention_banded(
+    q: jax.Array,  # [B, H, S, Dh] — self-attention (Sq == Skv)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    block_k: int = 512,  # unused; kept for API parity
+) -> jax.Array:
+    """Causal sliding-window attention via banded chunks.
+
+    q is split into chunks of size W=window; chunk i attends only keys in
+    chunks [i-1, i] (exactly covers the (p-W, p] window), so compute and
+    memory are O(S * 2W) instead of O(S^2) with masking — the TPU-native
+    form of SWA (contiguous MXU tiles, no wasted masked blocks).
+    """
+    B, H, S, Dh = q.shape
+    Hkv = k.shape[1]
+    W = window
+    if S % W != 0:  # pad sequence to a chunk multiple (tail masked)
+        pad = W - S % W
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return attention_banded(qp, kp, vp, window=W)[:, :, :S]
+    n = S // W
+    rep = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, rep, n, W, Dh)
+    kc = k.astype(jnp.float32).reshape(B, Hkv, n, W, Dh)
+    vc = v.astype(jnp.float32).reshape(B, Hkv, n, W, Dh)
+    # neighborhood [i-1, i]: prepend a zero chunk for i = 0
+    zeros = jnp.zeros_like(kc[:, :, :1])
+    k2 = jnp.concatenate([jnp.concatenate([zeros, kc[:, :, :-1]], axis=2), kc], axis=3)
+    v2 = jnp.concatenate([jnp.concatenate([zeros, vc[:, :, :-1]], axis=2), vc], axis=3)
+    scale = 1.0 / (Dh**0.5)
+    # NOTE(§Perf): a lax.scan over q chunks (one [W,2W] band live at a time)
+    # was measured WORSE here — hymba t_memory 66.7 -> 81.3s, peak temp ~flat
+    # (the peak is the global-attention layers, and the scan blocks fusion of
+    # the band softmax). Kept as one einsum; the Pallas flash kernel with
+    # window block-skipping is the real-TPU form with no HBM intermediates.
+    s = jnp.einsum("bgrnqd,bgnkd->bgrnqk", qf, k2) * scale  # [.., W, 2W]
+    qpos = jnp.arange(W)[:, None] + W  # position within the 2W band
+    kpos = jnp.arange(2 * W)[None, :]
+    first = jnp.arange(n) == 0
+    mask = (kpos <= qpos) & (kpos > qpos - W)  # causal + window
+    valid_prev = ~first[:, None, None]  # chunk 0 has no left neighbor
+    mask = mask[None, :, :] & (valid_prev | (kpos[None] >= W))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrnqk,bgnkd->bgrnqd", p, v2)
+    return out.reshape(B, H, S, Dh).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_offset, block_q, block_k):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+    )
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    return _flash(q, k, v, causal, window, q_offset, block_q, block_k), (q, k, v)
+
+
+def _flash_bwd(causal, window, q_offset, block_q, block_k, res, g):
+    q, k, v = res  # recompute blockwise (flash-style remat backward)
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_blockwise(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, block_k=block_k
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+    kv_len: int | jax.Array | None = None,
+    impl: Literal["auto", "naive", "blockwise", "flash"] = "auto",
+    block_q: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """Fused attention with GQA + causal/sliding-window masks.
+
+    ``q_offset``/``kv_len`` may be traced scalars except under impl='flash'
+    (the Pallas kernel specializes them statically).
+    """
+    Sq, Skv = q.shape[2], k.shape[2]
+    if impl == "auto":
+        if _on_tpu() and Sq >= 128 and isinstance(q_offset, int) and kv_len is None:
+            impl = "flash"
+        elif Sq * Skv > 2048 * 2048:
+            impl = "blockwise"
+        else:
+            impl = "naive"
+    if impl == "flash":
+        assert kv_len is None and isinstance(q_offset, int), "flash needs static bounds"
+        return _flash(q, k, v, causal, window, q_offset, block_q, min(block_k, 128))
+    # banded fast path for full-sequence sliding-window self-attention
+    if (
+        BANDED_WINDOW
+        and window > 0
+        and causal
+        and Sq == Skv
+        and Sq > window
+        and kv_len is None
+        and isinstance(q_offset, int)
+        and q_offset == 0
+    ):
+        fn = lambda q, k, v: attention_banded(q, k, v, window=window)
+        if RECOMPUTE_ATTN:
+            fn = jax.checkpoint(fn)
+        return fn(q, k, v)
+    if impl == "blockwise":
+        fn = lambda q, k, v: attention_blockwise(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_len=kv_len, block_k=block_k,
+        )
+        if RECOMPUTE_ATTN:
+            # recompute-vjp: backward re-streams KV blocks instead of storing
+            # per-block (s, p) residuals — the flash-attention memory trade
+            fn = jax.checkpoint(fn)
+        return fn(q, k, v)
+    return _ref.attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, kv_len=kv_len
+    )

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth a kernel must match under
+``np.testing.assert_allclose`` across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """[N, D] gathered by int32 ids [B] -> [B, D]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def scatter_add_ref(table: jax.Array, ids: jax.Array, grads: jax.Array) -> jax.Array:
+    """table[ids[i]] += grads[i] with duplicate ids accumulating."""
+    return table.at[ids].add(grads.astype(table.dtype))
+
+
+def adagrad_ref(
+    params: jax.Array,
+    accum: jax.Array,
+    grads: jax.Array,
+    lr: float,
+    eps: float = 1e-8,
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise Adagrad (the paper's CTR-style sparse optimizer)."""
+    g = grads.astype(jnp.float32)
+    new_accum = accum + g * g
+    new_params = params - lr * g / (jnp.sqrt(new_accum) + eps)
+    return new_params.astype(params.dtype), new_accum
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, Dh]
+    k: jax.Array,  # [B, Hkv, Skv, Dh]
+    v: jax.Array,  # [B, Hkv, Skv, Dh]
+    causal: bool = True,
+    window: int = 0,  # sliding window size; 0 = unlimited
+    q_offset: int | jax.Array = 0,  # absolute position of q[..., 0, :]
+    kv_len: int | jax.Array | None = None,  # valid kv prefix (decode caches)
+) -> jax.Array:
+    """Naive full-materialization attention with GQA + causal/window masks."""
+    B, H, Sq, Dh = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, dtype=jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul oracle: rows of x are grouped contiguously by expert.
+
+    x: [T, K] tokens sorted by expert; w: [E, K, N]; group_sizes: int32 [E]
+    summing to T. Row t multiplies w[e] where e is t's group.
+    """
+    T = x.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    gid = jnp.searchsorted(bounds, jnp.arange(T), side="right")
+    return jnp.einsum("tk,tkn->tn", x, w[gid])

@@ -1,0 +1,205 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production step (train_step for ``train_*``
+shapes, prefill/serve steps for ``prefill_*``/``decode_*``/``long_*``),
+lowers it against abstract inputs with full production shardings on the
+single-pod (16,16) and multi-pod (2,16,16) meshes, compiles, and records
+memory_analysis + cost_analysis + the collective schedule for the roofline.
+
+Results stream into a JSON file incrementally (resumable; a completed cell
+is skipped on rerun unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, ArchConfig, ShapeSpec, get_config, replace
+from repro.launch import inputs as inp
+from repro.launch import roofline as rl
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.models.common import abstract_params, logical_specs, param_count
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.optim import AdamW
+from repro.train.train_step import TrainSettings, make_lm_train_step, make_lm_train_step_hier
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "dryrun_results.json")
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeSpec, mesh) -> int:
+    """Pick grad-accum factor so per-microbatch activations fit HBM."""
+    dp = math.prod(mesh.shape[a] for a in shd.data_axes(mesh))
+    per_shard = shape.global_batch // max(1, dp)
+    if per_shard <= 1:
+        return 1
+    if cfg.d_model >= 8192:
+        return per_shard  # largest models: microbatch of 1 sequence/shard
+    if cfg.d_model >= 4096:
+        return max(1, per_shard // 2)
+    return max(1, per_shard // 4) if per_shard >= 4 else 1
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, settings_overrides=None):
+    """Returns (fn, args, in_shardings) ready to lower."""
+    rules = shd.build_rules(cfg, mesh)
+    shd.install_constraints(mesh, rules)
+    model = get_model(cfg)
+    schema = model.schema(cfg)
+    params = abstract_params(schema)
+    param_shard = shd.schema_shardings(schema, rules, mesh)
+
+    # per-microbatch gradients constrained to the FSDP param sharding ->
+    # XLA reduce-scatters each contribution (see §Perf)
+    from repro.models.common import set_param_constraint_fn
+
+    set_param_constraint_fn(
+        lambda grads: jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, param_shard
+        )
+    )
+
+    if shape.kind == "train":
+        settings = TrainSettings(
+            optimizer=AdamW(),
+            microbatches=microbatches_for(cfg, shape, mesh),
+            attn_impl="blockwise" if shape.seq_len > 8192 else "auto",
+            remat=True,
+        )
+        if settings_overrides:
+            settings = replace(settings, **settings_overrides)
+        opt = settings.optimizer
+        opt_state = jax.eval_shape(opt.init, params)
+        # m/v mirror the param shardings; step counter replicated
+        from repro.train.optim import AdamState
+
+        opt_shard = AdamState(shd.replicated(mesh), param_shard, param_shard)
+        batch = inp.train_batch(cfg, shape)
+        batch_shard = inp.batch_sharding(mesh, rules, batch)
+        if cfg.embedding_mode == "hier_ps":
+            fn = make_lm_train_step_hier(cfg, settings)
+            wt, acc = inp.hier_tables(cfg, shape.global_batch * shape.seq_len)
+            wt_shard = inp.batch_sharding(mesh, rules, {"working_table": wt})["working_table"]
+            args = (params, opt_state, batch, wt, acc)
+            shards = (param_shard, opt_shard, batch_shard, wt_shard, wt_shard)
+        else:
+            fn = make_lm_train_step(cfg, settings)
+            args = (params, opt_state, batch)
+            shards = (param_shard, opt_shard, batch_shard)
+        return fn, args, shards
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, attn_impl="blockwise")
+        batch = inp.prefill_batch(cfg, shape)
+        batch_shard = inp.batch_sharding(mesh, rules, batch)
+        return fn, (params, batch), (param_shard, batch_shard)
+
+    # decode
+    fn = make_decode_step(cfg, attn_impl="naive")
+    batch = inp.decode_batch(cfg, shape)
+    batch_shard = inp.batch_sharding(mesh, rules, batch)
+    cache, cache_shard = inp.decode_cache(cfg, shape, mesh, rules)
+    pos = inp.sds((), jnp.int32)
+    return (
+        fn,
+        (params, batch, cache, pos),
+        (param_shard, batch_shard, cache_shard, shd.replicated(mesh)),
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, settings_overrides=None, verbose=True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports(shape):
+        return {"arch": arch, "shape": shape_name, "skipped": "unsupported (see DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    n_chips = mesh.devices.size
+    t0 = time.perf_counter()
+    fn, args, shards = build_cell(cfg, shape, mesh, settings_overrides)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shards).lower(*args)
+        compiled = lowered.compile()
+    dt = time.perf_counter() - t0
+    shd.clear_constraints()
+
+    n_active = cfg.param_count(active_only=True)
+    mf = rl.model_flops(cfg, shape, n_active)
+    roof = rl.analyze(arch, shape_name, mesh_name, compiled, mf, n_chips, compile_seconds=dt)
+    if verbose:
+        ma = roof.memory_per_chip
+        print(
+            f"[{arch} x {shape_name} @ {mesh_name}] compile {dt:.1f}s | "
+            f"args {ma['argument_bytes']/2**30:.2f} GiB temp {ma['temp_bytes']/2**30:.2f} GiB | "
+            f"flops/chip {roof.flops_per_chip:.3e} bytes/chip {roof.bytes_per_chip:.3e} "
+            f"coll/chip {roof.collective_bytes_per_chip:.3e} | "
+            f"t_comp {roof.t_compute*1e3:.1f}ms t_mem {roof.t_memory*1e3:.1f}ms "
+            f"t_coll {roof.t_collective*1e3:.1f}ms -> {roof.bottleneck} | "
+            f"useful {roof.useful_flops_ratio:.2f} roofline {roof.roofline_fraction:.2%}"
+        )
+    return roof.to_dict()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    cells = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                for mp in meshes:
+                    cells.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    for arch, shape_name, mp in cells:
+        key = f"{arch}|{shape_name}|{'multi' if mp else 'single'}"
+        if key in results and not args.force and "error" not in results[key]:
+            print(f"skip {key} (cached)")
+            continue
+        try:
+            results[key] = run_cell(arch, shape_name, mp)
+        except Exception as e:  # record failures — they are bugs to fix
+            traceback.print_exc()
+            results[key] = {"arch": arch, "shape": shape_name, "error": repr(e)}
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_err = sum(1 for v in results.values() if "error" in v)
+    print(f"\n{len(results)} cells recorded, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

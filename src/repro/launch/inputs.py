@@ -1,0 +1,181 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every cell.
+
+``input_specs()`` provides weak-type-correct, shardable stand-ins for every
+model input — no device allocation — for each (arch x shape) cell. The
+working-table size in hier_ps mode is the static capacity the MEM-PS
+provisions: min(vocab, tokens-in-batch, 64k) for training/prefill (zipfian
+token traffic keeps real unique counts well under this; capacity misses fall
+back to a second pull in production), and a small bound for decode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.launch.sharding import data_axes, pspec
+from repro.models.attention import KVCache
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+WORKING_CAP = 65536
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def working_rows(cfg: ArchConfig, n_tokens: int) -> int:
+    n = min(cfg.vocab_size, n_tokens, WORKING_CAP)
+    return max(256, (n + 255) // 256 * 256)
+
+
+def _ns(mesh, *parts):
+    return NamedSharding(mesh, P(*parts))
+
+
+class Bundle(NamedTuple):
+    args: tuple  # abstract step args (after params/opt_state)
+    shardings: tuple  # matching NamedSharding pytrees
+
+
+def batch_sharding(mesh: Mesh, rules: dict, tree: Any):
+    """Shardings for a batch dict of ShapeDtypeStructs by logical meaning."""
+    dp = data_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def spec(path_leaf):
+        name, leaf = path_leaf
+        if name in ("tokens", "targets", "token"):
+            return _ns(mesh, dp if leaf.shape[0] % max(1, math.prod(mesh.shape[a] for a in dp)) == 0 else None)
+        if name in ("working_table", "row_accum"):
+            return NamedSharding(mesh, pspec(leaf.shape, ("working_rows", "working_dim"), rules, mesh))
+        if name in ("frames", "image_embeds"):
+            return NamedSharding(
+                mesh, pspec(leaf.shape, ("batch", None, "working_dim"), rules, mesh)
+            )
+        return NamedSharding(mesh, P())
+
+    return {k: spec((k, v)) for k, v in tree.items()}
+
+
+# --------------------------------------------------------------------------
+# per-kind input builders (batch dicts; params/opt handled by dryrun)
+# --------------------------------------------------------------------------
+
+
+def train_batch(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), I32), "targets": sds((B, S), I32)}
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.n_frames, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model), BF16)
+    return batch
+
+
+def hier_tables(cfg: ArchConfig, n_tokens: int) -> tuple:
+    n = working_rows(cfg, n_tokens)
+    return sds((n, cfg.d_model), F32), sds((n, cfg.d_model), F32)
+
+
+def prefill_batch(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), I32)}
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.n_frames, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model), BF16)
+    if cfg.embedding_mode == "hier_ps":
+        batch["working_table"] = hier_tables(cfg, B * S)[0]
+    return batch
+
+
+def decode_batch(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B = shape.global_batch
+    batch = {"token": sds((B, 1), I32)}
+    if cfg.embedding_mode == "hier_ps":
+        batch["working_table"] = sds((working_rows(cfg, max(B, 256)), cfg.d_model), F32)
+    return batch
+
+
+# --------------------------------------------------------------------------
+# decode caches (abstract) + shardings per family
+# --------------------------------------------------------------------------
+
+
+def decode_cache(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, rules: dict):
+    """Returns (abstract cache, cache shardings) for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dp = data_axes(mesh)
+    b_ax = dp if B % max(1, math.prod(mesh.shape[a] for a in dp)) == 0 else None
+
+    def kv_spec(length_dim_shape):
+        return NamedSharding(
+            mesh,
+            pspec(length_dim_shape, ("layers", "batch", "kv_heads_cache", "kv_seq", None), rules, mesh),
+        )
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        S_tot = S + (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        shp = (cfg.n_layers, B, Hkv, S_tot, hd)
+        cache = KVCache(sds(shp, BF16), sds(shp, BF16))
+        shard = KVCache(kv_spec(shp), kv_spec(shp))
+        return cache, shard
+
+    if cfg.family == "audio":
+        from repro.models.whisper import WhisperCache
+
+        self_shp = (cfg.n_layers, B, Hkv, S, hd)
+        cross_shp = (cfg.n_layers, B, Hkv, cfg.n_frames, hd)
+        cache = WhisperCache(
+            KVCache(sds(self_shp, BF16), sds(self_shp, BF16)),
+            KVCache(sds(cross_shp, BF16), sds(cross_shp, BF16)),
+        )
+        shard = WhisperCache(
+            KVCache(kv_spec(self_shp), kv_spec(self_shp)),
+            KVCache(kv_spec(cross_shp), kv_spec(cross_shp)),
+        )
+        return cache, shard
+
+    if cfg.family == "hybrid":
+        from repro.models import hymba as H
+
+        cache = jax.eval_shape(lambda: H.init_cache(cfg, B, max_len=S))
+
+        def spec(leaf):
+            if leaf.ndim == 5:  # KV caches [L, B, Hkv, len, hd]
+                return kv_spec(leaf.shape)
+            if leaf.ndim == 4 and leaf.shape[-1] == cfg.ssm_state:  # ssm h [L,B,din,N]
+                return NamedSharding(mesh, pspec(leaf.shape, (None, "batch", "ssm", None), rules, mesh))
+            if leaf.ndim == 4:  # conv hist [L,B,K-1,din]
+                return NamedSharding(mesh, pspec(leaf.shape, (None, "batch", None, "ssm"), rules, mesh))
+            return NamedSharding(mesh, P())
+
+        return cache, jax.tree.map(spec, cache)
+
+    if cfg.family == "ssm":
+        from repro.models import xlstm as X
+
+        cache = jax.eval_shape(lambda: X.init_cache(cfg, B))
+
+        def spec(leaf):
+            if leaf.ndim == 6:  # mLSTM C [ns, mp, B, H, dqk, dv]
+                return NamedSharding(mesh, pspec(leaf.shape, (None, None, "batch", None, "ssm", None), rules, mesh))
+            if leaf.ndim == 5 and leaf.shape[-1] != (4 - 1):  # n [ns,mp,B,H,dqk]
+                return NamedSharding(mesh, pspec(leaf.shape, (None, None, "batch", None, "ssm"), rules, mesh))
+            if leaf.ndim == 5:  # conv [ns, mp, B, K-1, dp]
+                return NamedSharding(mesh, pspec(leaf.shape, (None, None, "batch", None, "ssm"), rules, mesh))
+            return NamedSharding(mesh, P())
+
+        return cache, jax.tree.map(spec, cache)
+
+    raise ValueError(cfg.family)

@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [results.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def row(r: dict) -> str:
+    tc = r["flops_per_chip"] / PEAK_FLOPS_BF16
+    tm = r["bytes_per_chip"] / HBM_BW
+    tl = r["collective_bytes_per_chip"] / ICI_BW
+    dom = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
+    frac = r.get("roofline_fraction", 0.0)
+    useful = r.get("useful_flops_ratio", 0.0)
+    gib = r["memory_per_chip"]["argument_bytes"] / 2**30
+    tmp = r["memory_per_chip"]["temp_bytes"] / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(tc)} | {fmt_s(tm)} | "
+        f"{fmt_s(tl)} | **{dom}** | {useful:.2f} | {frac:.1%} | {gib:.2f}+{tmp:.2f} |"
+    )
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        results = json.load(f)
+    print(
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | bottleneck "
+        "| 6ND/HLO | roofline | GiB args+temp |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    order = sorted(
+        (k for k, v in results.items() if "error" not in v and "skipped" not in v),
+        key=lambda k: (results[k]["arch"], results[k]["shape"], results[k]["mesh"]),
+    )
+    for k in order:
+        print(row(results[k]))
+    skipped = [k for k, v in results.items() if "skipped" in v]
+    if skipped:
+        print(f"\nskipped cells ({len(skipped)}): long_500k on pure full-attention archs "
+              "(task-spec: sub-quadratic only; see DESIGN.md §Arch-applicability)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Roofline analysis from the compiled dry-run artifact (no hardware runs).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+  compute    = HLO_FLOPs / PEAK_FLOPS_BF16
+  memory     = HLO_bytes / HBM_BW
+  collective = collective_bytes / ICI_BW
+
+``compiled.cost_analysis()`` reports the *partitioned* (per-device) module,
+so FLOPs/bytes are already per chip — dividing the global numbers by chip
+count and using globals would give the same result; we use the per-device
+numbers directly. collective_bytes is not in cost_analysis: we parse the
+post-SPMD HLO text and sum *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op
+(operand shapes in the partitioned module are per-device shards, i.e. bytes
+actually leaving the chip, modulo algorithm factors noted in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)  # op kind -> #instructions
+    bytes_by_kind: dict = field(default_factory=dict)  # op kind -> operand bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_OP_RE = re.compile(r"\b(" + "|".join(_COLLECTIVES) + r")(-done)?\(")
+_GROUP_SET_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_SET_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum *operand* sizes of every collective in partitioned HLO text.
+
+    The partitioned module prints operands as bare %refs, so operand bytes
+    are derived from the instruction's output shape and the op semantics:
+      all-gather:      operand = output / group      (output is gathered)
+      reduce-scatter:  operand = output * group      (output is the shard)
+      all-reduce / all-to-all / collective-permute: operand = output.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "-start" in s:  # async pair: count at the -done (final shapes)
+            continue
+        eq = s.find("=")
+        if eq < 0:
+            continue
+        m = _OP_RE.search(s, eq)
+        if not m:
+            continue
+        kind = m.group(1)
+        out_bytes = sum(_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(s[eq : m.start()]))
+        if out_bytes == 0:
+            continue
+        g = max(1, _group_size(s))
+        if kind == "all-gather":
+            operand_bytes = out_bytes // g
+        elif kind == "reduce-scatter":
+            operand_bytes = out_bytes * g
+        else:
+            operand_bytes = out_bytes
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + operand_bytes
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_counts: dict
+    collective_bytes_by_kind: dict
+    model_flops_global: float  # 6*N*D (6*N_active*D for MoE)
+    n_chips: int
+    memory_per_chip: dict  # from memory_analysis
+    compile_seconds: float = 0.0
+    # raw XLA flat numbers (while bodies counted once) for reference
+    xla_flat_flops: float = 0.0
+    xla_flat_bytes: float = 0.0
+    unknown_trip_loops: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory, "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): >1 => HLO under-counts
+        (e.g. scan bodies), <1 => remat/dispatch overhead."""
+        hlo_global = self.flops_per_chip * self.n_chips
+        return self.model_flops_global / hlo_global if hlo_global else float("inf")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute share of the bounding term: (model_flops/chips/peak)
+        / max(term) — the score we hillclimb."""
+        t_useful = self.model_flops_global / self.n_chips / PEAK_FLOPS_BF16
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def analyze(arch, shape, mesh_name, compiled, model_flops_global, n_chips, compile_seconds=0.0) -> Roofline:
+    """Roofline terms from the partitioned module, trip-count corrected.
+
+    XLA's flat cost_analysis counts while bodies once; the hlo_analysis
+    walker multiplies by known trip counts and computes exact dot FLOPs,
+    fusion-level HBM bytes, and per-kind collective operand bytes.
+    """
+    from repro.launch.hlo_analysis import analyze_text
+
+    flat = compiled.cost_analysis()
+    text = compiled.as_text()
+    hc = analyze_text(text)
+    flops = float(hc.dot_flops)
+    byts = float(hc.hbm_bytes)
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "peak_bytes": int(
+            getattr(ma, "peak_memory_in_bytes", 0)
+            or getattr(ma, "temp_size_in_bytes", 0) + getattr(ma, "argument_size_in_bytes", 0)
+        ),
+    }
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        collective_bytes_per_chip=float(hc.total_collective_bytes),
+        collective_counts=hc.collective_counts,
+        collective_bytes_by_kind=hc.collective_bytes,
+        model_flops_global=model_flops_global,
+        n_chips=n_chips,
+        memory_per_chip=mem,
+        compile_seconds=compile_seconds,
+        xla_flat_flops=float(flat.get("flops", 0.0)),
+        xla_flat_bytes=float(flat.get("bytes accessed", 0.0)),
+        unknown_trip_loops=hc.unknown_trip_loops,
+    )
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6*N*D for training; 2*N*D for inference (fwd only). D = tokens."""
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * toks
+    toks = shape.global_batch * 1
+    return 2.0 * n_params_active * toks

@@ -1,0 +1,70 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf triage for one dry-run cell: roofline terms + top cost sites.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.triage --arch olmoe-1b-7b --shape train_4k
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch import dryrun as DR
+from repro.launch import sharding as shd
+from repro.launch.hlo_analysis import analyze_text
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.roofline import model_flops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    t0 = time.perf_counter()
+    fn, fargs, shards = DR.build_cell(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shards).lower(*fargs).compile()
+    shd.clear_constraints()
+    print(f"compiled in {time.perf_counter()-t0:.1f}s")
+    text = compiled.as_text()
+    if args.save_hlo:
+        with open(args.save_hlo, "w") as f:
+            f.write(text)
+    hc = analyze_text(text)
+    n_chips = mesh.devices.size
+    tc = hc.dot_flops / PEAK_FLOPS_BF16
+    tm = hc.hbm_bytes / HBM_BW
+    tl = hc.total_collective_bytes / ICI_BW
+    mf = model_flops(cfg, shape, cfg.param_count(active_only=True))
+    t_useful = mf / n_chips / PEAK_FLOPS_BF16
+    print(f"t_compute={tc:.3f}s t_memory={tm:.3f}s t_collective={tl:.3f}s")
+    print(f"useful(6ND) t={t_useful:.3f}s -> roofline fraction {t_useful/max(tc,tm,tl):.2%}")
+    ma = compiled.memory_analysis()
+    print(f"memory: args {ma.argument_size_in_bytes/2**30:.2f} GiB, temp {ma.temp_size_in_bytes/2**30:.2f} GiB")
+    print("\n-- top HBM byte sites (trip-multiplied) --")
+    for site, b in hc.top_bytes(14):
+        print(f"  {b/1e12:8.3f} TB  {site[:90]}")
+    print("\n-- top FLOP sites --")
+    for site, f_ in hc.top_flops(8):
+        print(f"  {f_/1e12:8.2f} TF  {site[:90]}")
+    print("\n-- collectives --")
+    for k in hc.collective_bytes:
+        print(f"  {k:20s} {hc.collective_bytes[k]/1e9:10.2f} GB  x{hc.collective_counts[k]:.0f}")
+
+
+if __name__ == "__main__":
+    main()

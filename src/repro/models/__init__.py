@@ -1,0 +1,58 @@
+"""Model zoo registry: one uniform API per architecture family."""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.configs import ArchConfig
+
+
+def get_model(cfg: ArchConfig) -> SimpleNamespace:
+    """Returns a namespace with schema/init/forward/prefill/decode_step."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+
+        return SimpleNamespace(
+            name="transformer",
+            schema=m.schema,
+            init=m.init,
+            forward=m.forward,
+            prefill=m.prefill,
+            decode_step=m.decode_step,
+        )
+    if cfg.family == "hybrid":
+        from repro.models import hymba as m
+
+        return SimpleNamespace(
+            name="hymba",
+            schema=m.schema,
+            init=m.init,
+            forward=m.forward,
+            prefill=m.prefill,
+            decode_step=m.decode_step,
+            init_cache=m.init_cache,
+        )
+    if cfg.family == "ssm":
+        from repro.models import xlstm as m
+
+        return SimpleNamespace(
+            name="xlstm",
+            schema=m.schema,
+            init=m.init,
+            forward=m.forward,
+            prefill=None,  # recurrent: prefill == forward stepping states
+            decode_step=m.decode_step,
+            init_cache=m.init_cache,
+        )
+    if cfg.family == "audio":
+        from repro.models import whisper as m
+
+        return SimpleNamespace(
+            name="whisper",
+            schema=m.schema,
+            init=m.init,
+            forward=m.forward,
+            prefill=m.prefill,
+            decode_step=m.decode_step,
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,111 @@
+"""GQA attention block: projections + RoPE + cache plumbing.
+
+One module serves all four execution modes:
+
+  train    — full-sequence causal attention, no cache
+  prefill  — full-sequence causal attention, emits a KV cache
+  decode   — one token vs a cache (kv_len = traced position + 1)
+  ring     — one token vs a sliding-window ring buffer (sub-quadratic decode)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.common import ParamSpec, apply_rope, rope_tables, with_logical_constraint
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, Hkv, C, Dh]
+    v: jax.Array  # [B, Hkv, C, Dh]
+
+
+def attention_schema(cfg: ArchConfig, layers: int | None = None, rope: bool = True) -> dict:
+    """Schema for stacked attention projections (leading ``layers`` dim)."""
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers if layers is None else layers
+    stack = (L,) if L else ()
+    lax_ = ("layers",) if L else ()
+    return {
+        "wq": ParamSpec(stack + (d, H * hd), lax_ + ("embed", "heads"), fan_axis=len(stack)),
+        "wk": ParamSpec(stack + (d, Hkv * hd), lax_ + ("embed", "kv_heads"), fan_axis=len(stack)),
+        "wv": ParamSpec(stack + (d, Hkv * hd), lax_ + ("embed", "kv_heads"), fan_axis=len(stack)),
+        "wo": ParamSpec(stack + (H * hd, d), lax_ + ("heads", "embed"), fan_axis=len(stack)),
+    }
+
+
+def attention_block(
+    x: jax.Array,  # [B, S, d]
+    p: dict,  # one layer's {wq, wk, wv, wo}
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,  # [S] absolute positions of x
+    causal: bool = True,
+    window: int = 0,
+    rope: bool = True,
+    impl: str = "auto",
+    cache: Optional[KVCache] = None,
+    cache_pos: Optional[jax.Array] = None,  # traced write position (decode)
+    ring: bool = False,
+    q_offset: int | jax.Array = 0,
+    kv_len: int | jax.Array | None = None,
+    cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
+    return_kv: bool = False,  # cache-less prefill: emit this segment's K/V
+) -> tuple[jax.Array, Optional[KVCache]]:
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    q = with_logical_constraint(q, "batch", "heads_sep", None, None)
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+        v = (x @ p["wv"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    else:  # encoder-decoder cross attention: kv precomputed from encoder
+        k, v = cross_kv
+
+    if rope and cross_kv is None:
+        cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is None and return_kv:
+        new_cache = KVCache(k, v)
+    if cache is not None:
+        if ring:  # sliding-window ring buffer: slot = pos % window
+            W = cache.k.shape[2]
+            slot = (cache_pos % W).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, slot, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, slot, 0))
+            new_cache = KVCache(ck, cv)
+            k, v = ck, cv
+            causal = False  # every filled slot is past context
+            kv_len = jnp.minimum(cache_pos + 1, W)
+            window = 0  # the ring itself enforces the window
+        else:
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, cache_pos, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, cache_pos, 0))
+            new_cache = KVCache(ck, cv)
+            k, v = ck, cv
+            causal = False
+            kv_len = cache_pos + S
+
+    out = kops.attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, kv_len=kv_len, impl=impl
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = out @ p["wo"]
+    seq = "seq_act" if S > 1 else None  # sequence parallel in train/prefill
+    return with_logical_constraint(out, "batch", seq, "embed_act"), new_cache
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, length: int, n_layers: int, dtype=jnp.bfloat16):
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, Hkv, length, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

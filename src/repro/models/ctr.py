@@ -1,0 +1,93 @@
+"""The paper's CTR prediction network (Figure 1) + the LR baseline.
+
+Sparse one/multi-hot features -> embedding rows (through the hierarchical
+PS working table) -> per-slot sum pooling -> fully-connected tower ->
+sigmoid CTR. The embedding rows are the "sparse parameters" managed by
+HBM/MEM/SSD-PS; the tower is the small dense part pinned in HBM.
+
+Inputs are padded sparse rows:
+  slots_ids  int32 [B, nnz]  — working-slot ids (renumbered keys)
+  slot_of    int32 [B, nnz]  — which feature slot each nonzero belongs to
+  valid      bool  [B, nnz]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.ctr_models import CTRConfig
+from repro.models.common import ParamSpec, init_params
+
+
+def tower_schema(cfg: CTRConfig) -> dict:
+    dims = (cfg.n_slots * cfg.emb_dim,) + tuple(cfg.mlp_hidden) + (1,)
+    out = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        out[f"w{i}"] = ParamSpec((a, b), ("embed", "mlp"), fan_axis=0)
+        out[f"b{i}"] = ParamSpec((b,), (None,), init="zeros")
+    return out
+
+
+def init_tower(cfg: CTRConfig, rng: jax.Array):
+    return init_params(tower_schema(cfg), rng)
+
+
+def embed_pool(
+    working_table: jax.Array,  # [n_working, emb_dim]
+    slot_ids: jax.Array,  # [B, nnz]
+    slot_of: jax.Array,  # [B, nnz]
+    valid: jax.Array,  # [B, nnz]
+    n_slots: int,
+) -> jax.Array:
+    """Sum-pool embedding rows into per-slot buckets -> [B, n_slots*emb]."""
+    B, nnz = slot_ids.shape
+    emb = jnp.take(working_table, slot_ids, axis=0)  # [B, nnz, emb]
+    emb = emb * valid[..., None]
+    onehot = jax.nn.one_hot(slot_of, n_slots, dtype=emb.dtype)  # [B, nnz, n_slots]
+    pooled = jnp.einsum("bne,bns->bse", emb, onehot)  # [B, n_slots, emb]
+    return pooled.reshape(B, -1)
+
+
+def forward(
+    cfg: CTRConfig,
+    tower,
+    working_table: jax.Array,
+    slot_ids: jax.Array,
+    slot_of: jax.Array,
+    valid: jax.Array,
+) -> jax.Array:
+    """Returns CTR logits [B]."""
+    h = embed_pool(working_table, slot_ids, slot_of, valid, cfg.n_slots)
+    n = len([k for k in tower if k.startswith("w")])
+    for i in range(n):
+        h = h @ tower[f"w{i}"] + tower[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h[:, 0]
+
+
+def loss_fn(cfg, tower, working_table, slot_ids, slot_of, valid, labels) -> jax.Array:
+    """Mean BCE-with-logits."""
+    logits = forward(cfg, tower, working_table, slot_ids, slot_of, valid)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# --------------------------------------------------------------------------
+# LR baseline (Tables 1-2): one weight per sparse feature, same PS machinery
+# --------------------------------------------------------------------------
+
+
+def lr_forward(working_table: jax.Array, slot_ids: jax.Array, valid: jax.Array, bias: jax.Array) -> jax.Array:
+    """working_table: [n_working, 1] per-feature weights. Returns logits [B]."""
+    w = jnp.take(working_table[:, 0], slot_ids)  # [B, nnz]
+    return jnp.sum(w * valid, axis=1) + bias
+
+
+def lr_loss_fn(working_table, slot_ids, valid, labels, bias) -> jax.Array:
+    logits = lr_forward(working_table, slot_ids, valid, bias)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,335 @@
+"""Hymba: hybrid-head LM — parallel attention + mamba heads in every layer.
+
+Per the paper [arXiv:2411.13676]: each layer normalizes its input once, runs
+*attention heads* and *SSM (mamba) heads* in parallel on it, normalizes each
+branch output and averages them (learned per-branch scale), then a SwiGLU MLP.
+128 learned meta tokens are prepended to the sequence. Most layers use
+sliding-window attention (SWA); layers {first, middle, last} use full
+("global") attention.
+
+Layer layout: the interleaved global/SWA pattern is realized as *segments* —
+the SWA runs are scanned (stacked params), the few global layers are
+unrolled. This keeps the scan uniform (a single static window per scan) and
+gives each group its own cache geometry for long-context decode:
+
+  * SWA layers — ring-buffer KV cache of size ``window``  (O(1) in context)
+  * global layers — full-length KV cache (only 3 layers -> affordable)
+  * mamba heads — O(1) recurrent state
+
+which is exactly why this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import mamba as mamba_mod
+from repro.models.attention import KVCache, attention_block, attention_schema
+from repro.models.common import ParamSpec, init_params, rms_norm, with_logical_constraint
+from repro.models.transformer import COMPUTE_DTYPE, _cast, mlp_block, mlp_schema
+
+
+class HymbaCache(NamedTuple):
+    swa: KVCache  # [n_swa, B, Hkv, W, Dh] ring buffers
+    glb: KVCache  # [n_glb, B, Hkv, C, Dh] full caches
+    ssm_swa: mamba_mod.MambaState  # stacked [n_swa, ...]
+    ssm_glb: mamba_mod.MambaState  # stacked [n_glb, ...]
+
+
+def segments(cfg: ArchConfig) -> list[tuple[str, int, int]]:
+    """[(kind, start_layer, n_layers)] covering 0..n_layers in order."""
+    glb = sorted(cfg.global_attn_layers)
+    out: list[tuple[str, int, int]] = []
+    prev = 0
+    for g in glb:
+        if g > prev:
+            out.append(("swa", prev, g - prev))
+        out.append(("global", g, 1))
+        prev = g + 1
+    if prev < cfg.n_layers:
+        out.append(("swa", prev, cfg.n_layers - prev))
+    return out
+
+
+def _layer_schema(cfg: ArchConfig, L: int) -> dict:
+    d = cfg.d_model
+    return {
+        "ln_in": ParamSpec((L, d), ("layers", None), init="ones"),
+        "ln_attn": ParamSpec((L, d), ("layers", None), init="ones"),
+        "ln_ssm": ParamSpec((L, d), ("layers", None), init="ones"),
+        "beta_attn": ParamSpec((L, d), ("layers", None), init="ones"),
+        "beta_ssm": ParamSpec((L, d), ("layers", None), init="ones"),
+        "ln_mlp": ParamSpec((L, d), ("layers", None), init="ones"),
+        "attn": attention_schema(cfg, layers=L),
+        "ssm": mamba_mod.mamba_schema(d, cfg.ssm_state, layers=L),
+        "mlp": mlp_schema(cfg, layers=L),
+    }
+
+
+def schema(cfg: ArchConfig) -> dict:
+    n_glb = len(cfg.global_attn_layers)
+    n_swa = cfg.n_layers - n_glb
+    out: dict = {
+        "swa_layers": _layer_schema(cfg, n_swa),
+        "glb_layers": _layer_schema(cfg, n_glb),
+        "meta_tokens": ParamSpec((cfg.n_meta_tokens, cfg.d_model), (None, "embed"), scale=0.02),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+    if cfg.embedding_mode == "dense":
+        out["embed"] = ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab_rep", "embed_tp"), scale=0.02)
+    return out
+
+
+def init(cfg: ArchConfig, rng: jax.Array):
+    return init_params(schema(cfg), rng)
+
+
+def _hymba_layer(
+    cfg: ArchConfig,
+    h: jax.Array,
+    lp: dict,
+    *,
+    positions: jax.Array,
+    window: int,
+    attn_impl: str,
+    cache: Optional[KVCache] = None,
+    cache_pos=None,
+    ring: bool = False,
+    ssm_state: Optional[mamba_mod.MambaState] = None,
+    q_offset=0,
+):
+    x = rms_norm(h, lp["ln_in"], cfg.norm_eps)
+    attn_out, new_kv = attention_block(
+        x, lp["attn"], cfg,
+        positions=positions, causal=True, window=window, impl=attn_impl,
+        cache=cache, cache_pos=cache_pos, ring=ring, q_offset=q_offset,
+        return_kv=cache is None,
+    )
+    if ssm_state is None and x.shape[1] > 1:
+        # recompute-vjp: don't store the chunk-scan intermediates
+        # (decay/drive [B,Q,din,N] trees) as backward residuals (§Perf)
+        ssm_out, new_state = jax.checkpoint(
+            lambda p_, x_: mamba_mod.mamba_mixer(p_, x_)
+        )(lp["ssm"], x)
+    else:
+        ssm_out, new_state = mamba_mod.mamba_mixer(lp["ssm"], x, state=ssm_state)
+    mixed = 0.5 * (
+        rms_norm(attn_out, lp["ln_attn"], cfg.norm_eps) * lp["beta_attn"]
+        + rms_norm(ssm_out, lp["ln_ssm"], cfg.norm_eps) * lp["beta_ssm"]
+    )
+    h = h + mixed
+    m = rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+    h = h + mlp_block(m, lp["mlp"], cfg)
+    return h, new_kv, new_state
+
+
+def _take(params: dict, sl: slice):
+    return jax.tree.map(lambda a: a[sl], params)
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # [B, S]
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+    remat: bool = True,
+    collect: bool = False,
+):
+    """Train/prefill forward. Meta tokens prepended. Returns
+    (logits [B, S, V], aux) — or (logits, per-segment (kv, ssm) lists) when
+    ``collect`` (prefill uses this to build the decode cache)."""
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, tokens, working_table)
+    B = h.shape[0]
+    meta = jnp.broadcast_to(
+        params["meta_tokens"].astype(COMPUTE_DTYPE)[None], (B,) + params["meta_tokens"].shape
+    )
+    h = jnp.concatenate([meta, h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    collected: list = []
+    swa_idx = glb_idx = 0
+    for kind, start, n in segments(cfg):
+        window = 0 if kind == "global" else cfg.window
+        group = params["glb_layers"] if kind == "global" else params["swa_layers"]
+        idx = glb_idx if kind == "global" else swa_idx
+        stack = _take(group, slice(idx, idx + n))
+
+        def scan_body(carry, layer_p, window=window):
+            out, kv, st = _hymba_layer(
+                cfg, carry, _cast(layer_p),
+                positions=positions, window=window, attn_impl=attn_impl,
+            )
+            ys = None
+            if collect:
+                ys = (
+                    kv.k.astype(COMPUTE_DTYPE),
+                    kv.v.astype(COMPUTE_DTYPE),
+                    st.h,
+                    st.conv,
+                )
+            return out, ys
+
+        body = jax.checkpoint(scan_body, policy=jax.checkpoint_policies.nothing_saveable) if remat else scan_body
+        h, ys = jax.lax.scan(body, h, stack)
+        collected.append((kind, ys))
+        if kind == "global":
+            glb_idx += n
+        else:
+            swa_idx += n
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    # drop meta-token positions from the output
+    logits = logits[:, cfg.n_meta_tokens :]
+    if collect:
+        return logits.astype(jnp.float32), collected
+    return logits.astype(jnp.float32), jnp.float32(0)
+
+
+def prefill(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+    max_len: int | None = None,
+):
+    """Returns (last_logits [B,1,V], HymbaCache ready for decode at
+    pos = n_meta + S). SWA caches become ring buffers (last ``window``
+    positions, rolled so slot = pos % window); global caches are padded to
+    ``max_len``."""
+    B, S_in = tokens.shape
+    S_tot = cfg.n_meta_tokens + S_in
+    W = cfg.window
+    max_len = max_len or S_tot
+    logits, collected = forward(
+        cfg, params, tokens, working_table=working_table, attn_impl=attn_impl,
+        remat=False, collect=True,
+    )
+    swa_k, swa_v, swa_h, swa_c = [], [], [], []
+    glb_k, glb_v, glb_h, glb_c = [], [], [], []
+    for kind, (ks, vs, hs, cs) in collected:
+        if kind == "global":
+            pad = max_len - S_tot
+            glb_k.append(jnp.pad(ks, ((0, 0),) * 3 + ((0, pad), (0, 0))))
+            glb_v.append(jnp.pad(vs, ((0, 0),) * 3 + ((0, pad), (0, 0))))
+            glb_h.append(hs), glb_c.append(cs)
+        else:
+            if S_tot >= W:  # ring: slot j holds position p with p % W == j
+                rk = jnp.roll(ks[..., S_tot - W :, :], S_tot % W, axis=-2)
+                rv = jnp.roll(vs[..., S_tot - W :, :], S_tot % W, axis=-2)
+            else:
+                pad = ((0, 0),) * 3 + ((0, W - S_tot), (0, 0))
+                rk, rv = jnp.pad(ks, pad), jnp.pad(vs, pad)
+            swa_k.append(rk), swa_v.append(rv)
+            swa_h.append(hs), swa_c.append(cs)
+    cache = HymbaCache(
+        KVCache(jnp.concatenate(swa_k), jnp.concatenate(swa_v)),
+        KVCache(jnp.concatenate(glb_k), jnp.concatenate(glb_v)),
+        mamba_mod.MambaState(jnp.concatenate(swa_h), jnp.concatenate(swa_c)),
+        mamba_mod.MambaState(jnp.concatenate(glb_h), jnp.concatenate(glb_c)),
+    )
+    return logits[:, -1:].astype(jnp.float32), cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> HymbaCache:
+    n_glb = len(cfg.global_attn_layers)
+    n_swa = cfg.n_layers - n_glb
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    W = min(cfg.window, max_len)
+    swa_shape = (n_swa, batch, Hkv, W, hd)
+    glb_shape = (n_glb, batch, Hkv, max_len, hd)
+    one_layer = _strip(cfg)
+    ssm_swa = mamba_mod.init_mamba_state(one_layer, batch, n_layers=n_swa)
+    ssm_glb = mamba_mod.init_mamba_state(one_layer, batch, n_layers=n_glb)
+    return HymbaCache(
+        KVCache(jnp.zeros(swa_shape, dtype), jnp.zeros(swa_shape, dtype)),
+        KVCache(jnp.zeros(glb_shape, dtype), jnp.zeros(glb_shape, dtype)),
+        ssm_swa,
+        ssm_glb,
+    )
+
+
+def _strip(cfg: ArchConfig) -> dict:
+    """Abstract one-layer mamba params (shapes only) for state allocation."""
+    sch = mamba_mod.mamba_schema(cfg.d_model, cfg.ssm_state, layers=None)
+    from repro.models.common import abstract_params
+
+    return abstract_params(sch)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    token: jax.Array,  # [B, 1]
+    cache: HymbaCache,
+    pos: jax.Array,  # scalar int32: tokens already consumed (incl. meta)
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "naive",
+):
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, token, working_table)
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+
+    new_swa_k, new_swa_v, new_glb_k, new_glb_v = [], [], [], []
+    new_ssm_swa_h, new_ssm_swa_c, new_ssm_glb_h, new_ssm_glb_c = [], [], [], []
+    swa_idx = glb_idx = 0
+    for kind, start, n in segments(cfg):
+        is_glb = kind == "global"
+        group = params["glb_layers"] if is_glb else params["swa_layers"]
+        idx = glb_idx if is_glb else swa_idx
+        stack = _take(group, slice(idx, idx + n))
+        kv = cache.glb if is_glb else cache.swa
+        st = cache.ssm_glb if is_glb else cache.ssm_swa
+        kv_seg = KVCache(kv.k[idx : idx + n], kv.v[idx : idx + n])
+        st_seg = mamba_mod.MambaState(st.h[idx : idx + n], st.conv[idx : idx + n])
+
+        def scan_body(carry, xs, is_glb=is_glb):
+            layer_p, ck, cv, sh, sc = xs
+            out, new_kv, new_state = _hymba_layer(
+                cfg, carry, _cast(layer_p),
+                positions=positions,
+                window=0,
+                attn_impl=attn_impl,
+                cache=KVCache(ck, cv),
+                cache_pos=pos,
+                ring=not is_glb,
+                ssm_state=mamba_mod.MambaState(sh, sc),
+                q_offset=pos,
+            )
+            return out, (new_kv.k, new_kv.v, new_state.h, new_state.conv)
+
+        h, (ks, vs, shs, scs) = jax.lax.scan(
+            scan_body, h, (stack, kv_seg.k, kv_seg.v, st_seg.h, st_seg.conv)
+        )
+        if is_glb:
+            new_glb_k.append(ks), new_glb_v.append(vs)
+            new_ssm_glb_h.append(shs), new_ssm_glb_c.append(scs)
+            glb_idx += n
+        else:
+            new_swa_k.append(ks), new_swa_v.append(vs)
+            new_ssm_swa_h.append(shs), new_ssm_swa_c.append(scs)
+            swa_idx += n
+
+    new_cache = HymbaCache(
+        KVCache(jnp.concatenate(new_swa_k), jnp.concatenate(new_swa_v)),
+        KVCache(jnp.concatenate(new_glb_k), jnp.concatenate(new_glb_v)),
+        mamba_mod.MambaState(jnp.concatenate(new_ssm_swa_h), jnp.concatenate(new_ssm_swa_c)),
+        mamba_mod.MambaState(jnp.concatenate(new_ssm_glb_h), jnp.concatenate(new_ssm_glb_c)),
+    )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), new_cache

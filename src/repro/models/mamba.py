@@ -1,0 +1,178 @@
+"""Mamba (S6) selective-SSM mixer — used by the Hymba hybrid heads.
+
+Faithful Mamba-1 structure: in-proj -> causal depthwise conv + SiLU ->
+selective scan (input-dependent dt, B, C; diagonal A) -> gate -> out-proj.
+
+Scan strategies:
+  * ``recurrent`` — lax.scan over time, state h [B, din, N]. Exact; O(1)
+    state; used for decode and as the oracle.
+  * ``chunked``  — lax.scan over chunks of size Q with a closed-form
+    intra-chunk pass in log space (cumsum of decays). Memory O(S*din*N/Q
+    chunks processed one at a time) — used for train/prefill.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, with_logical_constraint
+
+
+class MambaState(NamedTuple):
+    h: jax.Array  # [B, din, N]
+    conv: jax.Array  # [B, K-1, din] — last K-1 inputs for the depthwise conv
+
+
+def mamba_schema(d_model: int, ssm_state: int, layers: int | None = None, expand: int = 2, conv_k: int = 4, dt_rank: int = 128) -> dict:
+    din = expand * d_model
+    L = layers
+    stack = (L,) if L else ()
+    lax_ = ("layers",) if L else ()
+    f = len(stack)
+    return {
+        "in_proj": ParamSpec(stack + (d_model, 2 * din), lax_ + ("embed", "ssm"), fan_axis=f),
+        "conv_w": ParamSpec(stack + (conv_k, din), lax_ + (None, "ssm"), scale=0.5, fan_axis=f),
+        "conv_b": ParamSpec(stack + (din,), lax_ + ("ssm",), init="zeros"),
+        "w_bc": ParamSpec(stack + (din, 2 * ssm_state), lax_ + ("ssm", None), fan_axis=f),
+        "w_dt_down": ParamSpec(stack + (din, dt_rank), lax_ + ("ssm", None), fan_axis=f),
+        "w_dt_up": ParamSpec(stack + (dt_rank, din), lax_ + (None, "ssm"), fan_axis=f),
+        "dt_bias": ParamSpec(stack + (din,), lax_ + ("ssm",), init="zeros"),
+        "a_log": ParamSpec(stack + (din, ssm_state), lax_ + ("ssm", None), init="zeros"),
+        "d_skip": ParamSpec(stack + (din,), lax_ + ("ssm",), init="ones"),
+        "out_proj": ParamSpec(stack + (din, d_model), lax_ + ("ssm", "embed"), fan_axis=f),
+    }
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array, history: jax.Array | None = None):
+    """Depthwise causal conv. x: [B,S,din]; w: [K,din]. history: [B,K-1,din]."""
+    K = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, din]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_hist = xp[:, -(K - 1) :] if K > 1 else xp[:, :0]
+    return out, new_hist
+
+
+def _ssm_inputs(p: dict, x: jax.Array):
+    """Common projections. x: [B,S,din] (post-conv). Returns dt, B_t, C_t, A."""
+    N = p["a_log"].shape[-1]
+    bc = x @ p["w_bc"]  # [B,S,2N]
+    B_t, C_t = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus((x @ p["w_dt_down"]) @ p["w_dt_up"] + p["dt_bias"])  # [B,S,din]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [din, N], negative
+    return dt, B_t, C_t, A
+
+
+def mamba_mixer(
+    p: dict,
+    x: jax.Array,  # [B, S, d_model]
+    *,
+    chunk: int = 256,
+    state: MambaState | None = None,
+) -> tuple[jax.Array, MambaState]:
+    """Full mixer. With ``state`` (decode), S is typically 1."""
+    B, S, _ = x.shape
+    din = p["out_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :din], xz[..., din:]
+    xin, conv_hist = _conv_causal(
+        xin, p["conv_w"], p["conv_b"], None if state is None else state.conv
+    )
+    xin = jax.nn.silu(xin)
+    xin = with_logical_constraint(xin, "batch", None, "ssm_act")
+    dt, B_t, C_t, A = _ssm_inputs(p, xin)
+
+    h0 = None if state is None else state.h
+    if S == 1 and state is not None:  # decode: one recurrent step
+        y, h = _scan_recurrent(xin, dt, B_t, C_t, A, h0)
+    else:
+        q = min(chunk, S)
+        while S % q:  # largest power-of-two-ish divisor (meta tokens etc.)
+            q //= 2
+        y, h = _scan_chunked(xin, dt, B_t, C_t, A, h0, chunk=max(1, q))
+    y = y + p["d_skip"] * xin
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    out = with_logical_constraint(out, "batch", None, "embed_act")
+    return out, MambaState(h, conv_hist)
+
+
+def _scan_recurrent(xin, dt, B_t, C_t, A, h0):
+    """Exact per-step recurrence (oracle + decode). Shapes: xin/dt [B,S,din],
+    B_t/C_t [B,S,N], A [din,N]."""
+    B, S, din = xin.shape
+    N = A.shape[-1]
+    h0 = jnp.zeros((B, din, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # [B,din],[B,din],[B,N],[B,N]
+        decay = jnp.exp(dt_t[..., None] * A[None])  # [B,din,N]
+        drive = (dt_t * x_t)[..., None] * b_t[:, None, :]  # [B,din,N]
+        h = decay * h + drive
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        xin.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B_t.transpose(1, 0, 2).astype(jnp.float32),
+        C_t.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(xin.dtype), h
+
+
+def _scan_chunked(xin, dt, B_t, C_t, A, h0, *, chunk: int):
+    """Chunkwise-parallel selective scan.
+
+    Within a chunk (local steps 1..Q) the linear recurrence
+    ``h_j = exp(l_j) h_{j-1} + u_j`` is evaluated with an *associative scan*
+    over (decay, value) pairs — numerically safe (only products of decays
+    <= 1 appear; a cumsum/exp(-cum) closed form overflows f32 for strong
+    decays) and log-depth on device. Memory O(Q * din * N) per chunk; the
+    outer lax.scan carries the O(1) state between chunks.
+    """
+    B, S, din = xin.shape
+    N = A.shape[-1]
+    Q = chunk
+    assert S % Q == 0, f"S={S} must tile by chunk={Q}"
+    n_chunks = S // Q
+    h0 = jnp.zeros((B, din, N), jnp.float32) if h0 is None else h0
+
+    xin_c = xin.reshape(B, n_chunks, Q, din).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dt_c = dt.reshape(B, n_chunks, Q, din).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = B_t.reshape(B, n_chunks, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = C_t.reshape(B, n_chunks, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    def combine(a, b):
+        (d1, v1), (d2, v2) = a, b
+        return d1 * d2, d2 * v1 + v2
+
+    def chunk_step(h, inp):
+        x_q, dt_q, b_q, c_q = inp  # [B,Q,din],[B,Q,din],[B,Q,N],[B,Q,N]
+        l = dt_q[..., None] * A[None, None]  # [B,Q,din,N] log decay per step
+        decay = jnp.exp(l)
+        u = (dt_q * x_q)[..., None] * b_q[:, :, None, :]  # [B,Q,din,N]
+        D, V = jax.lax.associative_scan(combine, (decay, u), axis=1)
+        h_all = D * h[:, None] + V  # [B,Q,din,N]
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, c_q)
+        return h_all[:, -1], y
+
+    h, ys = jax.lax.scan(chunk_step, h0, (xin_c, dt_c, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, din)
+    return y.astype(xin.dtype), h
+
+
+def init_mamba_state(p_one_layer: dict, batch: int, n_layers: int | None = None) -> MambaState:
+    din, N = p_one_layer["a_log"].shape[-2:]
+    K = p_one_layer["conv_w"].shape[-2]
+    lead = (n_layers,) if n_layers else ()
+    return MambaState(
+        jnp.zeros(lead + (batch, din, N), jnp.float32),
+        jnp.zeros(lead + (batch, K - 1, din), jnp.float32),
+    )

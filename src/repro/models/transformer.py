@@ -1,0 +1,259 @@
+"""Decoder-only transformer LM: dense, MoE and VLM families.
+
+Production conventions:
+
+* **scan over layers** with stacked parameters (compile time independent of
+  depth; the standard MaxText/Megatron-JAX structure);
+* configurable **remat** around the scan body (activation checkpointing);
+* **bf16 compute / f32 master params**;
+* the input embedding follows the paper's technique when
+  ``cfg.embedding_mode == 'hier_ps'``: the train/serve step takes a dense
+  *working table* (the batch's unique token rows, pulled by the MEM-PS) and
+  renumbered ``slots`` instead of owning a [vocab, d] parameter. The output
+  head is a dense (fully-referenced) parameter either way, as in the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import moe as moe_mod
+from repro.models.attention import KVCache, attention_block, attention_schema
+from repro.models.common import (
+    ParamSpec,
+    init_params,
+    mlp_activation,
+    rms_norm,
+    with_logical_constraint,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def mlp_schema(cfg: ArchConfig, layers: int | None = None) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    L = cfg.n_layers if layers is None else layers
+    stack = (L,) if L else ()
+    lax_ = ("layers",) if L else ()
+    fan = len(stack)
+    schema = {
+        "wi": ParamSpec(stack + (d, ff), lax_ + ("embed", "mlp"), fan_axis=fan),
+        "wo": ParamSpec(stack + (ff, d), lax_ + ("mlp", "embed"), fan_axis=fan),
+    }
+    if cfg.mlp_act == "swiglu":
+        schema["wg"] = ParamSpec(stack + (d, ff), lax_ + ("embed", "mlp"), fan_axis=fan)
+    return schema
+
+
+def mlp_block(x: jax.Array, p: dict, cfg: ArchConfig) -> jax.Array:
+    h = x @ p["wi"]
+    if cfg.mlp_act == "swiglu":
+        h = mlp_activation("swiglu", h, x @ p["wg"])
+    else:
+        h = mlp_activation(cfg.mlp_act, h)
+    h = with_logical_constraint(h, "batch", None, "mlp_act")
+    out = h @ p["wo"]
+    seq = "seq_act" if out.shape[1] > 1 else None  # sequence parallel
+    return with_logical_constraint(out, "batch", seq, "embed_act")
+
+
+def schema(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    layers: dict = {
+        "ln1": ParamSpec((cfg.n_layers, d), ("layers", None), init="ones"),
+        "ln2": ParamSpec((cfg.n_layers, d), ("layers", None), init="ones"),
+        "attn": attention_schema(cfg),
+    }
+    if cfg.is_moe:
+        layers["moe"] = moe_mod.moe_schema(cfg)
+    else:
+        layers["mlp"] = mlp_schema(cfg)
+    out: dict = {
+        "layers": layers,
+        "final_norm": ParamSpec((d,), (None,), init="ones"),
+        "lm_head": ParamSpec((d, cfg.vocab_size), ("embed", "vocab"), fan_axis=0),
+    }
+    if cfg.embedding_mode == "dense":
+        out["embed"] = ParamSpec((cfg.vocab_size, d), ("vocab_rep", "embed_tp"), scale=0.02)
+    return out
+
+
+def init(cfg: ArchConfig, rng: jax.Array):
+    return init_params(schema(cfg), rng)
+
+
+# --------------------------------------------------------------------------
+# embedding resolution
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # [B, S] int32 — token ids (dense) or working slots
+    working_table: Optional[jax.Array],  # [n_working, d] (hier_ps mode)
+) -> jax.Array:
+    from repro.models.common import embed_gather
+
+    if cfg.embedding_mode == "hier_ps":
+        assert working_table is not None, "hier_ps mode needs the working table"
+        h = embed_gather(working_table, tokens)
+    else:
+        h = embed_gather(params["embed"], tokens)
+    # gather output sharded like the table's d dim (rows replicated, d
+    # tensor-parallel): the row gather is fully local per shard and XLA
+    # all-gathers the [b, s, d] activation only where full-d is needed
+    h = with_logical_constraint(h, "batch", None, "embed_tp")
+    return h.astype(COMPUTE_DTYPE)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill share the layer stack)
+# --------------------------------------------------------------------------
+
+
+def _cast(p):
+    return jax.tree.map(lambda a: a.astype(COMPUTE_DTYPE) if a.dtype == jnp.float32 else a, p)
+
+
+def _layer_fn(cfg: ArchConfig, attn_impl: str, capacity: int | None):
+    def body(h, layer_p, positions):
+        a = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+        attn_out, _ = attention_block(
+            a, layer_p["attn"], cfg, positions=positions, causal=True, impl=attn_impl
+        )
+        h = h + attn_out
+        m = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mlp_out, aux = moe_mod.moe_block(m, layer_p["moe"], cfg, capacity=capacity)
+        else:
+            mlp_out, aux = mlp_block(m, layer_p["mlp"], cfg), jnp.float32(0)
+        return h + mlp_out, aux
+
+    return body
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # [B, S]
+    *,
+    working_table: Optional[jax.Array] = None,
+    image_embeds: Optional[jax.Array] = None,  # [B, n_img, d] (vlm)
+    attn_impl: str = "auto",
+    remat: bool = True,
+    logits_for: str = "all",  # all | last
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    h = embed_tokens(cfg, params, tokens, working_table)
+    if image_embeds is not None:
+        h = jnp.concatenate([image_embeds.astype(COMPUTE_DTYPE), h], axis=1)
+    B, S, d = h.shape
+    positions = jnp.arange(S)
+
+    body = _layer_fn(cfg, attn_impl, None)
+
+    def scan_body(carry, layer_p):
+        out, aux = body(carry, _cast(layer_p), positions)
+        return out, aux
+
+    if remat:
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    h, auxs = jax.lax.scan(scan_body, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if logits_for == "last":
+        h = h[:, -1:]
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    logits = with_logical_constraint(logits, "batch", None, "vocab_act")
+    return logits.astype(jnp.float32), jnp.sum(auxs)
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # [B, S]
+    *,
+    working_table: Optional[jax.Array] = None,
+    image_embeds: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+) -> tuple[jax.Array, KVCache]:
+    """Full-sequence forward emitting the KV cache + last-position logits."""
+    h = embed_tokens(cfg, params, tokens, working_table)
+    if image_embeds is not None:
+        h = jnp.concatenate([image_embeds.astype(COMPUTE_DTYPE), h], axis=1)
+    B, S, d = h.shape
+    positions = jnp.arange(S)
+
+    def scan_body(carry, layer_p):
+        lp = _cast(layer_p)
+        a = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, kv = attention_block(
+            a, lp["attn"], cfg, positions=positions, causal=True, impl=attn_impl,
+            return_kv=True,
+        )
+        h2 = carry + attn_out
+        m = rms_norm(h2, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mlp_out, _ = moe_mod.moe_block(m, lp["moe"], cfg)
+        else:
+            mlp_out = mlp_block(m, lp["mlp"], cfg)
+        return h2 + mlp_out, (kv.k.astype(COMPUTE_DTYPE), kv.v.astype(COMPUTE_DTYPE))
+
+    h, (ks, vs) = jax.lax.scan(scan_body, h, params["layers"])
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), KVCache(ks, vs)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    token: jax.Array,  # [B, 1] int32
+    cache: KVCache,  # stacked [L, B, Hkv, C, Dh]
+    pos: jax.Array,  # scalar int32: number of tokens already in cache
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "naive",
+) -> tuple[jax.Array, KVCache]:
+    h = embed_tokens(cfg, params, token, working_table)
+    B = h.shape[0]
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+
+    def scan_body(carry, xs):
+        layer_p, ck, cv = xs
+        lp = _cast(layer_p)
+        a = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, new_cache = attention_block(
+            a,
+            lp["attn"],
+            cfg,
+            positions=positions,
+            impl=attn_impl,
+            cache=KVCache(ck, cv),
+            cache_pos=pos,
+            q_offset=pos,
+        )
+        h2 = carry + attn_out
+        m = rms_norm(h2, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            mlp_out, _ = moe_mod.moe_block(m, lp["moe"], cfg)
+        else:
+            mlp_out = mlp_block(m, lp["mlp"], cfg)
+        return h2 + mlp_out, (new_cache.k, new_cache.v)
+
+    h, (ks, vs) = jax.lax.scan(scan_body, h, (params["layers"], cache.k, cache.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), KVCache(ks, vs)

@@ -1,0 +1,240 @@
+"""Whisper backbone: transformer encoder + decoder with cross-attention.
+
+Per the task spec the conv/mel frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings [B, n_frames, d_model] (what the two conv
+layers would emit). Everything downstream — sinusoidal encoder positions,
+pre-LN blocks with biased LayerNorm, GELU MLPs, learned decoder positions,
+causal self-attention + cross-attention — is implemented.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.attention import KVCache, attention_block, attention_schema
+from repro.models.common import (
+    ParamSpec,
+    init_params,
+    layer_norm,
+    with_logical_constraint,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+class WhisperCache(NamedTuple):
+    self_kv: KVCache  # [L, B, H, C, Dh] decoder self-attention
+    cross_kv: KVCache  # [L, B, H, n_frames, Dh] precomputed from encoder
+
+
+def _ln(L: int, d: int) -> dict:
+    return {
+        "w": ParamSpec((L, d), ("layers", None), init="ones"),
+        "b": ParamSpec((L, d), ("layers", None), init="zeros"),
+    }
+
+
+def _mlp(L: int, d: int, ff: int) -> dict:
+    return {
+        "wi": ParamSpec((L, d, ff), ("layers", "embed", "mlp"), fan_axis=1),
+        "bi": ParamSpec((L, ff), ("layers", "mlp"), init="zeros"),
+        "wo": ParamSpec((L, ff, d), ("layers", "mlp", "embed"), fan_axis=1),
+        "bo": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+    }
+
+
+def schema(cfg: ArchConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    out: dict = {
+        "encoder": {
+            "ln1": _ln(Le, d),
+            "attn": attention_schema(cfg, layers=Le),
+            "ln2": _ln(Le, d),
+            "mlp": _mlp(Le, d, ff),
+        },
+        "enc_final_ln": {"w": ParamSpec((d,), (None,), init="ones"), "b": ParamSpec((d,), (None,), init="zeros")},
+        "decoder": {
+            "ln1": _ln(Ld, d),
+            "self_attn": attention_schema(cfg, layers=Ld),
+            "ln_x": _ln(Ld, d),
+            "cross_attn": attention_schema(cfg, layers=Ld),
+            "ln2": _ln(Ld, d),
+            "mlp": _mlp(Ld, d, ff),
+        },
+        "dec_final_ln": {"w": ParamSpec((d,), (None,), init="ones"), "b": ParamSpec((d,), (None,), init="zeros")},
+        # published whisper uses 448 decoder positions; sized to cover the
+        # assigned decode_32k cell (backbone-structural contract, DESIGN.md)
+        "dec_pos": ParamSpec((65536, d), (None, "embed"), scale=0.02),
+        "lm_head": ParamSpec((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+    if cfg.embedding_mode == "dense":
+        out["embed"] = ParamSpec((cfg.vocab_size, d), ("vocab_rep", "embed_tp"), scale=0.02)
+    return out
+
+
+def init(cfg: ArchConfig, rng: jax.Array):
+    return init_params(schema(cfg), rng)
+
+
+def _sinusoids(length: int, d: int) -> jax.Array:
+    half = d // 2
+    log_timescale = jnp.log(10000.0) / (half - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def _cast(p):
+    return jax.tree.map(lambda a: a.astype(COMPUTE_DTYPE) if a.dtype == jnp.float32 else a, p)
+
+
+def encode(cfg: ArchConfig, params, frames: jax.Array, *, attn_impl: str = "auto", remat: bool = True) -> jax.Array:
+    """frames: [B, n_frames, d] stub conv output. Returns encoder states."""
+    h = frames.astype(COMPUTE_DTYPE) + _sinusoids(frames.shape[1], cfg.d_model).astype(COMPUTE_DTYPE)
+    h = with_logical_constraint(h, "batch", None, "embed_act")
+    positions = jnp.arange(frames.shape[1])
+
+    def body(carry, lp):
+        lp = _cast(lp)
+        a = layer_norm(carry, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        attn_out, _ = attention_block(
+            a, lp["attn"], cfg, positions=positions, causal=False, rope=False, impl=attn_impl
+        )
+        h2 = carry + attn_out
+        m = layer_norm(h2, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        mlp = jax.nn.gelu(m @ lp["mlp"]["wi"] + lp["mlp"]["bi"]) @ lp["mlp"]["wo"] + lp["mlp"]["bo"]
+        return h2 + mlp, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return layer_norm(h, params["enc_final_ln"]["w"], params["enc_final_ln"]["b"], cfg.norm_eps)
+
+
+def _decoder_layer(cfg, carry, lp, positions, enc_or_kv, *, self_cache=None, cache_pos=None, attn_impl="auto", return_kv=False):
+    a = layer_norm(carry, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+    self_out, new_self = attention_block(
+        a, lp["self_attn"], cfg, positions=positions, causal=True, rope=False,
+        impl=attn_impl, cache=self_cache, cache_pos=cache_pos,
+        q_offset=0 if cache_pos is None else cache_pos, return_kv=return_kv,
+    )
+    h = carry + self_out
+    x = layer_norm(h, lp["ln_x"]["w"], lp["ln_x"]["b"], cfg.norm_eps)
+    if isinstance(enc_or_kv, KVCache):  # precomputed cross K/V (decode)
+        cross_out, _ = attention_block(
+            x, lp["cross_attn"], cfg, positions=positions, causal=False, rope=False,
+            impl=attn_impl, cross_kv=(enc_or_kv.k, enc_or_kv.v),
+        )
+        new_cross = enc_or_kv
+    else:  # encoder states: project K/V here (prefill) and emit them
+        B, Se, _ = enc_or_kv.shape
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        ck = (enc_or_kv @ lp["cross_attn"]["wk"]).reshape(B, Se, Hkv, hd).transpose(0, 2, 1, 3)
+        cv = (enc_or_kv @ lp["cross_attn"]["wv"]).reshape(B, Se, Hkv, hd).transpose(0, 2, 1, 3)
+        cross_out, _ = attention_block(
+            x, lp["cross_attn"], cfg, positions=positions, causal=False, rope=False,
+            impl=attn_impl, cross_kv=(ck, cv),
+        )
+        new_cross = KVCache(ck, cv)
+    h = h + cross_out
+    m = layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+    mlp = jax.nn.gelu(m @ lp["mlp"]["wi"] + lp["mlp"]["bi"]) @ lp["mlp"]["wo"] + lp["mlp"]["bo"]
+    return h + mlp, new_self, new_cross
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # [B, S] decoder tokens
+    frames: jax.Array,  # [B, n_frames, d] stub frontend embeddings
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+    remat: bool = True,
+):
+    """Training forward: encoder + teacher-forced decoder. Returns logits."""
+    enc = encode(cfg, params, frames, attn_impl=attn_impl, remat=remat)
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, tokens, working_table)
+    S = tokens.shape[1]
+    h = h + params["dec_pos"][:S].astype(COMPUTE_DTYPE)
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        out, _, _ = _decoder_layer(cfg, carry, _cast(lp), positions, enc, attn_impl=attn_impl)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = layer_norm(h, params["dec_final_ln"]["w"], params["dec_final_ln"]["b"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), jnp.float32(0)
+
+
+def prefill(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    frames: jax.Array,
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+):
+    """Encode audio + consume the decoder prompt; emit self+cross caches."""
+    enc = encode(cfg, params, frames, attn_impl=attn_impl, remat=False)
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, tokens, working_table)
+    S = tokens.shape[1]
+    h = h + params["dec_pos"][:S].astype(COMPUTE_DTYPE)
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        out, skv, ckv = _decoder_layer(
+            cfg, carry, _cast(lp), positions, enc, attn_impl=attn_impl, return_kv=True
+        )
+        return out, ((skv.k, skv.v), (ckv.k, ckv.v))
+
+    h, ((sk, sv), (ck, cv)) = jax.lax.scan(body, h, params["decoder"])
+    h = layer_norm(h[:, -1:], params["dec_final_ln"]["w"], params["dec_final_ln"]["b"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), WhisperCache(KVCache(sk, sv), KVCache(ck, cv))
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    token: jax.Array,  # [B, 1]
+    cache: WhisperCache,
+    pos: jax.Array,
+    *,
+    working_table: Optional[jax.Array] = None,
+    attn_impl: str = "naive",
+):
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, token, working_table)
+    h = h + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1).astype(COMPUTE_DTYPE)
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+
+    def body(carry, xs):
+        lp, sk, sv, ck, cv = xs
+        out, new_self, _ = _decoder_layer(
+            cfg, carry, _cast(lp), positions, KVCache(ck, cv),
+            self_cache=KVCache(sk, sv), cache_pos=pos, attn_impl=attn_impl,
+        )
+        return out, (new_self.k, new_self.v)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["decoder"], cache.self_kv.k, cache.self_kv.v, cache.cross_kv.k, cache.cross_kv.v)
+    )
+    h = layer_norm(h, params["dec_final_ln"]["w"], params["dec_final_ln"]["b"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), WhisperCache(KVCache(nk, nv), cache.cross_kv)

@@ -1,0 +1,449 @@
+"""xLSTM LM: mLSTM blocks with one sLSTM block every ``slstm_every`` layers.
+
+mLSTM (matrix-memory, exponential gating) is parallelizable; we implement
+
+  * an exact **sequential** recurrence (oracle + decode step), and
+  * a **chunkwise-parallel** form (TPU-native: intra-chunk quadratic on the
+    MXU + O(1) inter-chunk state, the FlashLinearAttention/TFLA structure)
+    used for train/prefill — this is the hardware adaptation of record for
+    this arch (see DESIGN.md).
+
+sLSTM (scalar memory, hidden-to-hidden recurrence) is inherently sequential;
+it runs as a lax.scan over time with block-diagonal per-head recurrent
+matrices, exactly as published.
+
+Layer layout: supersteps of (slstm_every - 1) scanned mLSTM blocks followed
+by one unrolled sLSTM block; params are stacked [n_super, m_per, ...] so the
+whole depth compiles as two nested scans.
+
+Stabilized mLSTM recurrence (per head; q,k in R^dk, v in R^dv):
+
+  m_t = max(lf_t + m_{t-1}, li_t)
+  C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(li_t - m_t) k_t v_t^T
+  n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(li_t - m_t) k_t
+  h_t = (q_t C_t) / (max(|q_t . n_t|, exp(-m_t)) + eps)
+
+with lf = logsigmoid(f-preact), li = i-preact, q scaled by dk^-1/2.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.common import (
+    ParamSpec,
+    init_params,
+    rms_norm,
+    with_logical_constraint,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+EPS = 1e-6
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # [B, H, dk, dv]
+    n: jax.Array  # [B, H, dk]
+    m: jax.Array  # [B, H]
+    conv: jax.Array  # [B, K-1, dp]
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dh]
+    n: jax.Array  # [B, H, dh]
+    m: jax.Array  # [B, H, dh]
+    h: jax.Array  # [B, H, dh]
+
+
+class XLSTMCache(NamedTuple):
+    mlstm: MLSTMState  # stacked [n_super, m_per, ...]
+    slstm: SLSTMState  # stacked [n_super, ...]
+
+
+# --------------------------------------------------------------------------
+# schemas
+# --------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def _mlstm_schema(cfg: ArchConfig, stack: tuple[int, ...]) -> dict:
+    d = cfg.d_model
+    dp = int(cfg.proj_factor * d)
+    H = cfg.n_heads
+    dh = dp // H
+    lax_ = tuple("layers" for _ in stack)
+    f = len(stack)
+    return {
+        "ln": ParamSpec(stack + (d,), lax_ + (None,), init="ones"),
+        "w_up": ParamSpec(stack + (d, 2 * dp), lax_ + ("embed", "ssm"), fan_axis=f),
+        "conv_w": ParamSpec(stack + (CONV_K, dp), lax_ + (None, "ssm"), scale=0.5),
+        "conv_b": ParamSpec(stack + (dp,), lax_ + ("ssm",), init="zeros"),
+        # block-diagonal per-head projections; output dim tensor-parallel
+        # (replicating these cost 2 GiB/chip at 48 layers — §Perf)
+        "wq": ParamSpec(stack + (H, dh, dh), lax_ + (None, None, "ssm"), fan_axis=f + 1),
+        "wk": ParamSpec(stack + (H, dh, dh), lax_ + (None, None, "ssm"), fan_axis=f + 1),
+        "wv": ParamSpec(stack + (H, dh, dh), lax_ + (None, None, "ssm"), fan_axis=f + 1),
+        "w_i": ParamSpec(stack + (dp, H), lax_ + ("ssm", None), fan_axis=f),
+        "b_i": ParamSpec(stack + (H,), lax_ + (None,), init="zeros"),
+        "w_f": ParamSpec(stack + (dp, H), lax_ + ("ssm", None), fan_axis=f),
+        "b_f": ParamSpec(stack + (H,), lax_ + (None,), init="ones"),
+        "out_norm": ParamSpec(stack + (dp,), lax_ + ("ssm",), init="ones"),
+        "w_down": ParamSpec(stack + (dp, d), lax_ + ("ssm", "embed"), fan_axis=f),
+    }
+
+
+def _slstm_schema(cfg: ArchConfig, stack: tuple[int, ...]) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dff = int(4 * d / 3 + 127) // 128 * 128  # PF=4/3, padded to lanes
+    lax_ = tuple("layers" for _ in stack)
+    f = len(stack)
+    return {
+        "ln": ParamSpec(stack + (d,), lax_ + (None,), init="ones"),
+        "w_zifo": ParamSpec(stack + (d, 4 * d), lax_ + ("embed", "ssm"), fan_axis=f),
+        "r_zifo": ParamSpec(stack + (H, dh, 4 * dh), lax_ + (None, None, None), fan_axis=f + 1),
+        "b_zifo": ParamSpec(stack + (4 * d,), lax_ + ("ssm",), init="zeros"),
+        "out_norm": ParamSpec(stack + (d,), lax_ + (None,), init="ones"),
+        "ln_ffn": ParamSpec(stack + (d,), lax_ + (None,), init="ones"),
+        "ffn_up": ParamSpec(stack + (d, 2 * dff), lax_ + ("embed", "mlp"), fan_axis=f),
+        "ffn_down": ParamSpec(stack + (dff, d), lax_ + ("mlp", "embed"), fan_axis=f),
+    }
+
+
+def layout(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_super, mlstm_per_super). slstm_every == 0 -> pure mLSTM."""
+    if cfg.slstm_every == 0:
+        return 1, cfg.n_layers
+    assert cfg.n_layers % cfg.slstm_every == 0
+    return cfg.n_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+
+def schema(cfg: ArchConfig) -> dict:
+    n_super, m_per = layout(cfg)
+    has_slstm = cfg.slstm_every > 0
+    out: dict = {
+        "mlstm": _mlstm_schema(cfg, (n_super, m_per)),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+    if has_slstm:
+        out["slstm"] = _slstm_schema(cfg, (n_super,))
+    if cfg.embedding_mode == "dense":
+        out["embed"] = ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab_rep", "embed_tp"), scale=0.02)
+    return out
+
+
+def init(cfg: ArchConfig, rng: jax.Array):
+    return init_params(schema(cfg), rng)
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell — sequential (oracle/decode) and chunkwise (train/prefill)
+# --------------------------------------------------------------------------
+
+
+def mlstm_sequential(q, k, v, li, lf, state: tuple | None = None):
+    """q,k,v: [B,H,S,dh]; li,lf: [B,H,S]. Returns (h [B,H,S,dh], state)."""
+    B, H, S, dh = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+    qf = q.astype(jnp.float32) * (dh**-0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, li_t, lf_t = inp
+        m_new = jnp.maximum(lf_t + m, li_t)
+        decay = jnp.exp(lf_t + m - m_new)[..., None]
+        inject = jnp.exp(li_t - m_new)[..., None]
+        C = decay[..., None] * C + inject[..., None] * (k_t[..., :, None] * v_t[..., None, :])
+        n = decay * n + inject * k_t
+        num = jnp.einsum("bhk,bhkv->bhv", q_t, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q_t, n))
+        den = jnp.maximum(den, jnp.exp(-m_new)) + EPS
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (qf, kf, vf)) + tuple(
+        a.transpose(2, 0, 1) for a in (li, lf)
+    )
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, li, lf, state: tuple | None = None, *, chunk: int = 64):
+    """Chunkwise-parallel mLSTM, numerically identical to sequential."""
+    B, H, S, dh = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, f"S={S} must tile by chunk={Q}"
+    nC = S // Q
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    qf = (q.astype(jnp.float32) * (dh**-0.5)).reshape(B, H, nC, Q, dh).transpose(2, 0, 1, 3, 4)
+    kf = k.astype(jnp.float32).reshape(B, H, nC, Q, dh).transpose(2, 0, 1, 3, 4)
+    vf = v.astype(jnp.float32).reshape(B, H, nC, Q, dh).transpose(2, 0, 1, 3, 4)
+    lic = li.reshape(B, H, nC, Q).transpose(2, 0, 1, 3)
+    lfc = lf.reshape(B, H, nC, Q).transpose(2, 0, 1, 3)
+
+    def chunk_step(carry, inp):
+        C, n, m = inp_C, inp_n, inp_m = carry
+        q_c, k_c, v_c, li_c, lf_c = inp  # [B,H,Q,dh] / [B,H,Q]
+        a = jnp.cumsum(lf_c, axis=-1)  # decay chunk-start..j (inclusive)
+        g = a[..., -1]  # total chunk decay
+        # per-position stabilizer: max(inter, intra)
+        intra_sc = a[..., :, None] - a[..., None, :] + li_c[..., None, :]  # [B,H,Q,Q] (j,t)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        intra_sc = jnp.where(tri, intra_sc, -jnp.inf)
+        m_intra = intra_sc.max(axis=-1)  # [B,H,Q]
+        m_inter = a + m[..., None]  # [B,H,Q]
+        m_j = jnp.maximum(m_inter, m_intra)
+        # inter-chunk contribution
+        inter_w = jnp.exp(m_inter - m_j)  # [B,H,Q]
+        h_inter = jnp.einsum("bhqk,bhkv->bhqv", q_c, C) * inter_w[..., None]
+        n_inter = jnp.einsum("bhqk,bhk->bhq", q_c, n) * inter_w
+        # intra-chunk (masked quadratic)
+        w = jnp.exp(intra_sc - m_j[..., None])  # [B,H,Q,Q]
+        s = jnp.einsum("bhqk,bhtk->bhqt", q_c, k_c) * w
+        h_intra = jnp.einsum("bhqt,bhtv->bhqv", s, v_c)
+        n_intra = s.sum(axis=-1)
+        den = jnp.abs(n_inter + n_intra)
+        den = jnp.maximum(den, jnp.exp(-m_j)) + EPS
+        h_c = (h_inter + h_intra) / den[..., None]
+        # state update
+        m_next = jnp.maximum(g + m, (g[..., None] - a + li_c).max(axis=-1))
+        carry_decay = jnp.exp(g + m - m_next)  # [B,H]
+        kw = jnp.exp(g[..., None] - a + li_c - m_next[..., None])  # [B,H,Q]
+        C_next = carry_decay[..., None, None] * C + jnp.einsum(
+            "bhtk,bhtv->bhkv", k_c * kw[..., None], v_c
+        )
+        n_next = carry_decay[..., None] * n + (k_c * kw[..., None]).sum(axis=2)
+        return (C_next, n_next, m_next), h_c
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qf, kf, vf, lic, lfc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return h.astype(q.dtype), (C, n, m)
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+
+def _conv_causal(x, w, b, history=None):
+    K = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        if history is None
+        else history.astype(x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    return out, xp[:, -(K - 1) :]
+
+
+def _heads(x, H):
+    B, S, dp = x.shape
+    return x.reshape(B, S, H, dp // H).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+
+
+def mlstm_block(cfg: ArchConfig, p: dict, x: jax.Array, *, state: MLSTMState | None = None, chunk: int = 64):
+    """x: [B,S,d]. Returns (out, new_state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dp = p["w_down"].shape[0]
+    res = x
+    x = rms_norm(x, p["ln"], cfg.norm_eps)
+    u = x @ p["w_up"]
+    z, gate = u[..., :dp], u[..., dp:]
+    c, conv_hist = _conv_causal(z, p["conv_w"], p["conv_b"], None if state is None else state.conv)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bhsd,hde->bhse", _heads(c, H), p["wq"])
+    k = jnp.einsum("bhsd,hde->bhse", _heads(c, H), p["wk"])
+    v = jnp.einsum("bhsd,hde->bhse", _heads(z, H), p["wv"])
+    li = (c @ p["w_i"] + p["b_i"]).transpose(0, 2, 1).astype(jnp.float32)  # [B,H,S]
+    lf = jax.nn.log_sigmoid((c @ p["w_f"] + p["b_f"]).transpose(0, 2, 1).astype(jnp.float32))
+    cell_state = None if state is None else (state.C, state.n, state.m)
+    if S == 1 and state is not None:
+        h, new_cell = mlstm_sequential(q, k, v, li, lf, cell_state)
+    else:
+        h, new_cell = mlstm_chunkwise(q, k, v, li, lf, cell_state, chunk=chunk)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, dp)
+    # per-head group norm
+    hg = h.reshape(B, S, H, dp // H)
+    hg = hg * jax.lax.rsqrt(jnp.mean(hg.astype(jnp.float32) ** 2, axis=-1, keepdims=True) + cfg.norm_eps)
+    h = hg.reshape(B, S, dp).astype(x.dtype) * p["out_norm"]
+    out = (h * jax.nn.silu(gate)) @ p["w_down"]
+    out = with_logical_constraint(out, "batch", None, "embed_act")
+    new_state = MLSTMState(*new_cell, conv_hist)
+    return res + out, new_state
+
+
+def slstm_block(cfg: ArchConfig, p: dict, x: jax.Array, *, state: SLSTMState | None = None):
+    """Sequential sLSTM block + PF-4/3 gated FFN. x: [B,S,d]."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    res = x
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    wx = xn @ p["w_zifo"] + p["b_zifo"]  # [B,S,4d]
+    wx = wx.reshape(B, S, 4, H, dh).astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state = SLSTMState(zeros, zeros + EPS, zeros - 10.0, zeros)
+
+    r = p["r_zifo"].astype(jnp.float32)  # [H, dh, 4dh]
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, r).reshape(B, H, 4, dh)
+        zt = jnp.tanh(wx_t[:, :, 0] + rec[:, :, 0])
+        it = wx_t[:, :, 1] + rec[:, :, 1]
+        ft = wx_t[:, :, 2] + rec[:, :, 2]
+        ot = jax.nn.sigmoid(wx_t[:, :, 3] + rec[:, :, 3])
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(it - m_new) * zt
+        n_new = jnp.exp(lf + m - m_new) * n + jnp.exp(it - m_new)
+        h_new = ot * c_new / (n_new + EPS)
+        return SLSTMState(c_new, n_new, m_new, h_new), h_new
+
+    new_state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 3, 2, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    x = res + h
+    # gated FFN
+    m_in = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    u = m_in @ p["ffn_up"]
+    dff = p["ffn_down"].shape[0]
+    h2 = jax.nn.gelu(u[..., :dff]) * u[..., dff:]
+    return x + h2 @ p["ffn_down"], new_state
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+
+def _cast(p):
+    return jax.tree.map(lambda a: a.astype(COMPUTE_DTYPE) if a.dtype == jnp.float32 else a, p)
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    *,
+    working_table: Optional[jax.Array] = None,
+    remat: bool = True,
+    chunk: int = 64,
+    attn_impl: str = "auto",  # attention-free arch: accepted for API parity
+):
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, tokens, working_table)
+    n_super, m_per = layout(cfg)
+    has_slstm = cfg.slstm_every > 0
+
+    def super_body(carry, xs):
+        mp = xs["mlstm"]
+
+        def m_body(c2, lp):
+            out, _ = mlstm_block(cfg, _cast(lp), c2, chunk=chunk)
+            return out, None
+
+        body = jax.checkpoint(m_body, policy=jax.checkpoint_policies.nothing_saveable) if remat else m_body
+        carry, _ = jax.lax.scan(body, carry, mp)
+        if has_slstm:
+            carry, _ = slstm_block(cfg, _cast(xs["slstm"]), carry)
+        return carry, None
+
+    xs = {"mlstm": params["mlstm"]}
+    if has_slstm:
+        xs["slstm"] = params["slstm"]
+    h, _ = jax.lax.scan(super_body, h, xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), jnp.float32(0)
+
+
+def init_cache(cfg: ArchConfig, batch: int) -> XLSTMCache:
+    n_super, m_per = layout(cfg)
+    d = cfg.d_model
+    dp = int(cfg.proj_factor * d)
+    H = cfg.n_heads
+    dh_m = dp // H
+    dh_s = d // H
+    m = MLSTMState(
+        jnp.zeros((n_super, m_per, batch, H, dh_m, dh_m), jnp.float32),
+        jnp.zeros((n_super, m_per, batch, H, dh_m), jnp.float32),
+        jnp.full((n_super, m_per, batch, H), -jnp.inf, jnp.float32),
+        jnp.zeros((n_super, m_per, batch, CONV_K - 1, dp), jnp.float32),
+    )
+    s = SLSTMState(
+        jnp.zeros((n_super, batch, H, dh_s), jnp.float32),
+        jnp.zeros((n_super, batch, H, dh_s), jnp.float32) + EPS,
+        jnp.zeros((n_super, batch, H, dh_s), jnp.float32) - 10.0,
+        jnp.zeros((n_super, batch, H, dh_s), jnp.float32),
+    )
+    return XLSTMCache(m, s)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    token: jax.Array,  # [B, 1]
+    cache: XLSTMCache,
+    pos=None,  # unused (stateful recurrence); kept for API uniformity
+    *,
+    working_table: Optional[jax.Array] = None,
+):
+    from repro.models.transformer import embed_tokens
+
+    h = embed_tokens(cfg, params, token, working_table)
+    has_slstm = cfg.slstm_every > 0
+
+    def super_body(carry, xs):
+        h2 = carry
+        mp, mstate = xs["mlstm"], xs["mstate"]
+
+        def m_body(c2, inp):
+            lp, st = inp
+            out, new_st = mlstm_block(
+                cfg, _cast(lp), c2, state=MLSTMState(st[0], st[1], st[2], st[3])
+            )
+            return out, new_st
+
+        h2, new_m = jax.lax.scan(m_body, h2, (mp, tuple(mstate)))
+        new_s = None
+        if has_slstm:
+            h2, new_s = slstm_block(
+                cfg, _cast(xs["slstm"]), h2, state=SLSTMState(*xs["sstate"])
+            )
+        return h2, (new_m, new_s)
+
+    xs = {"mlstm": params["mlstm"], "mstate": tuple(cache.mlstm)}
+    if has_slstm:
+        xs["slstm"] = params["slstm"]
+        xs["sstate"] = tuple(cache.slstm)
+    h, (new_m, new_s) = jax.lax.scan(super_body, h, xs)
+    new_cache = XLSTMCache(
+        MLSTMState(*new_m), SLSTMState(*new_s) if has_slstm else cache.slstm
+    )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(COMPUTE_DTYPE)
+    return logits.astype(jnp.float32), new_cache

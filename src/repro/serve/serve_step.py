@@ -1,0 +1,101 @@
+"""Serving-step factories: prefill and decode programs per family.
+
+These are the exact programs the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` shape cells, and the programs examples/serve_lm.py
+runs. Decode caches:
+
+  transformer — KVCache stacked [L, B, Hkv, C, Dh]; C = context length;
+                sharded over (batch, kv-heads|kv-seq, -) per sharding rules
+  hymba       — HymbaCache: ring buffers (SWA) + 3 full caches + SSM states
+  xlstm       — XLSTMCache: O(1) recurrent state (no KV at all)
+  whisper     — WhisperCache: decoder self cache + precomputed cross K/V
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import get_model
+from repro.models.attention import KVCache
+
+
+def make_prefill_step(cfg: ArchConfig, attn_impl: str = "auto"):
+    """fn(params, batch) -> (last_logits, cache-or-state)."""
+    model = get_model(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def step(params, batch):
+            kwargs = {}
+            if cfg.family == "vlm":
+                kwargs["image_embeds"] = batch["image_embeds"]
+            if cfg.embedding_mode == "hier_ps":
+                kwargs["working_table"] = batch["working_table"]
+            from repro.models import transformer as T
+
+            return T.prefill(cfg, params, batch["tokens"], attn_impl=attn_impl, **kwargs)
+
+    elif cfg.family == "audio":
+
+        def step(params, batch):
+            from repro.models import whisper as W
+
+            kwargs = {}
+            if cfg.embedding_mode == "hier_ps":
+                kwargs["working_table"] = batch["working_table"]
+            return W.prefill(cfg, params, batch["tokens"], batch["frames"], attn_impl=attn_impl, **kwargs)
+
+    elif cfg.family == "hybrid":
+
+        def step(params, batch):
+            from repro.models import hymba as H
+
+            kwargs = {}
+            if cfg.embedding_mode == "hier_ps":
+                kwargs["working_table"] = batch["working_table"]
+            return H.prefill(cfg, params, batch["tokens"], attn_impl=attn_impl, **kwargs)
+
+    elif cfg.family == "ssm":
+
+        def step(params, batch):
+            from repro.models import xlstm as X
+
+            kwargs = {}
+            if cfg.embedding_mode == "hier_ps":
+                kwargs["working_table"] = batch["working_table"]
+            logits, _ = X.forward(cfg, params, batch["tokens"], remat=False, **kwargs)
+            return logits[:, -1:], None
+
+    else:
+        raise ValueError(cfg.family)
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig, attn_impl: str = "naive"):
+    """fn(params, batch, cache, pos) -> (logits, new_cache).
+
+    ``batch["token"]``: [B, 1] int32 (working slot in hier_ps mode);
+    ``pos``: traced int32 scalar — current context length.
+    """
+    model = get_model(cfg)
+
+    def step(params, batch, cache, pos):
+        kwargs = {}
+        if cfg.embedding_mode == "hier_ps":
+            kwargs["working_table"] = batch["working_table"]
+        if cfg.family == "ssm":
+            return model.decode_step(cfg, params, batch["token"], cache, **kwargs)
+        return model.decode_step(
+            cfg, params, batch["token"], cache, pos, attn_impl=attn_impl, **kwargs
+        )
+
+    return step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,92 @@
+"""Optimizers in pure JAX (pytree-based): AdamW and Adagrad.
+
+Adagrad is the paper-era CTR optimizer (per-row adaptive step on sparse
+rows); AdamW is the LM default. Both expose an optax-like
+(init, update) pair so the train step is optimizer-agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        if self.clip_norm > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1**step.astype(jnp.float32)
+        bc2 = 1 - b2**step.astype(jnp.float32)
+
+        def upd(p, mu, nu):
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(step, m, v)
+
+
+class AdagradState(NamedTuple):
+    accum: Any
+
+
+@dataclass(frozen=True)
+class Adagrad:
+    lr: float = 0.05
+    eps: float = 1e-8
+
+    def init(self, params) -> AdagradState:
+        return AdagradState(jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+    def update(self, grads, state: AdagradState, params):
+        accum = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)), state.accum, grads)
+
+        def upd(p, g, a):
+            return (p.astype(jnp.float32) - self.lr * g.astype(jnp.float32) / (jnp.sqrt(a) + self.eps)).astype(p.dtype)
+
+        return jax.tree.map(upd, params, grads, accum), AdagradState(accum)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,25 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py forces
+# 512 placeholder devices (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _clear_sharding_hooks():
+    """Launcher hooks (logical constraints, shard_map gather, grad
+    constraints) are process-global; never let one test leak into another."""
+    yield
+    from repro.models import common
+
+    common.set_logical_constraint_fn(None)
+    common.set_embed_gather_fn(None)
+    common.set_param_constraint_fn(None)

@@ -1,0 +1,72 @@
+"""Multi-node cluster: partitioned pull/push, failure, elastic reshard."""
+
+import numpy as np
+import pytest
+
+from repro.core.elastic import reshard
+from repro.core.node import Cluster, NodeDownError
+
+
+def make_cluster(tmp_path, n=4, dim=4):
+    return Cluster(n, str(tmp_path / f"c{n}"), dim=dim, cache_capacity=512, file_capacity=32)
+
+
+def test_partitioned_pull_push(tmp_path):
+    cl = make_cluster(tmp_path)
+    keys = np.random.default_rng(0).integers(0, 2**40, 300).astype(np.uint64)
+    v = cl.pull(keys)
+    cl.push(keys, v + 2.0)
+    np.testing.assert_allclose(cl.pull(np.unique(keys), pin=False),
+                               np.unique(keys)[:, None] * 0 + (cl.pull(np.unique(keys), pin=False)))
+    got = cl.pull(keys, requester=2, pin=False)
+    np.testing.assert_allclose(got, v + 2.0)
+    assert cl.network.bytes_moved > 0  # remote traffic happened
+
+
+def test_remote_vs_local_accounting(tmp_path):
+    cl = make_cluster(tmp_path)
+    keys = np.arange(1000, dtype=np.uint64)
+    cl.pull(keys, requester=0, pin=False)
+    assert cl.pull_local_time > 0 and cl.pull_remote_time > 0
+    # ~3/4 of keys are remote for requester 0
+    owners = cl.owner_of(keys)
+    assert 0.5 < (owners != 0).mean() < 0.95
+
+
+def test_node_failure_raises_and_restart(tmp_path):
+    cl = make_cluster(tmp_path)
+    keys = np.arange(100, dtype=np.uint64)
+    v = cl.pull(keys, pin=False)
+    cl.push(keys, v + 1, unpin=False)
+    cl.flush_all()
+    cl.kill_node(1)
+    with pytest.raises(NodeDownError):
+        cl.pull(keys, pin=False)
+    cl.nodes[1].restart()
+    got = cl.pull(keys, pin=False)  # SSD state survived the DRAM loss
+    np.testing.assert_allclose(got, v + 1)
+
+
+def test_manifest_restore_roundtrip(tmp_path):
+    cl = make_cluster(tmp_path)
+    keys = np.arange(200, dtype=np.uint64)
+    v = cl.pull(keys)
+    cl.push(keys, v * 3)
+    manifest = cl.manifest()
+    cl2 = Cluster.restore(manifest, cl.base_dir)
+    np.testing.assert_allclose(cl2.pull(keys, pin=False), v * 3)
+
+
+@pytest.mark.parametrize("new_n", [2, 6])
+def test_elastic_reshard_preserves_rows(tmp_path, new_n):
+    cl = make_cluster(tmp_path, n=4)
+    keys = np.random.default_rng(1).integers(0, 2**40, 500).astype(np.uint64)
+    keys = np.unique(keys)
+    v = cl.pull(keys)
+    cl.push(keys, v + 5)
+    new = reshard(cl, new_n, str(tmp_path / f"resharded{new_n}"))
+    got = new.pull(keys, pin=False)
+    np.testing.assert_allclose(got, v + 5)
+    # every node owns roughly 1/new_n of the keys
+    counts = np.bincount(new.owner_of(keys), minlength=new_n)
+    assert counts.min() > 0.7 * counts.mean()

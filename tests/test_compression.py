@@ -1,0 +1,57 @@
+"""Gradient compression: quantization error bounds + error feedback."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compression import (
+    ErrorFeedbackCompressor,
+    dequantize_int8,
+    quantize_int8,
+    sparse_decode,
+    sparse_encode,
+)
+
+
+@given(
+    st.integers(1, 32),
+    st.integers(1, 64),
+    st.floats(0.01, 100.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantization_error_bound(n, d, scale):
+    rng = np.random.default_rng(42)
+    x = (rng.standard_normal((n, d)) * scale).astype(np.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(dequantize_int8(q, s) - x)
+    per_row_bound = np.abs(x).max(axis=1, keepdims=True) / 127.0
+    assert (err <= per_row_bound * 0.5 + 1e-6).all()
+
+
+def test_sparse_packet_roundtrip_and_size():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**40, 100).astype(np.uint64)
+    vals = rng.standard_normal((100, 16)).astype(np.float32)
+    pkt = sparse_encode(keys, vals, quantize=True)
+    k2, v2 = sparse_decode(pkt)
+    np.testing.assert_array_equal(k2, keys)
+    assert np.abs(v2 - vals).max() < np.abs(vals).max() / 100
+    raw = keys.nbytes + vals.nbytes
+    assert pkt.nbytes < raw * 0.5  # ~3.2x compression incl. keys
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of applied (dequantized) updates converges to the sum of true
+    gradients — the residual never grows."""
+    rng = np.random.default_rng(1)
+    comp = ErrorFeedbackCompressor((8, 32))
+    total_true = np.zeros((8, 32), np.float32)
+    total_applied = np.zeros((8, 32), np.float32)
+    for _ in range(200):
+        g = rng.standard_normal((8, 32)).astype(np.float32)
+        q, s = comp.compress(g)
+        total_true += g
+        total_applied += dequantize_int8(q, s)
+    # residual bounded => averages match closely
+    assert np.abs(total_true - total_applied).max() < 1.0
+    assert np.abs(comp.residual).max() < 0.5

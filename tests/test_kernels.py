@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.embedding_lookup import embedding_lookup_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_adagrad import adagrad_pallas
+from repro.kernels.scatter_add import scatter_add_pallas
+
+
+# ---------------------------------------------------------------- lookup
+@pytest.mark.parametrize("N,D,B", [(16, 128, 8), (64, 256, 32), (128, 512, 7), (32, 2048, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_lookup_sweep(N, D, B, dtype):
+    key = jax.random.PRNGKey(N + D + B)
+    table = jax.random.normal(key, (N, D), dtype)
+    ids = jax.random.randint(key, (B,), 0, N)
+    out = embedding_lookup_pallas(table, ids, interpret=True)
+    np.testing.assert_array_equal(out, ref.embedding_lookup_ref(table, ids))
+
+
+# ---------------------------------------------------------------- scatter
+@pytest.mark.parametrize("N,D,B", [(16, 128, 8), (64, 256, 64), (8, 512, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scatter_add_with_duplicates(N, D, B, dtype):
+    key = jax.random.PRNGKey(N * D + B)
+    table = jax.random.normal(key, (N, D), jnp.float32).astype(dtype)
+    ids = jax.random.randint(key, (B,), 0, N)  # heavy duplication when B > N
+    grads = jax.random.normal(jax.random.fold_in(key, 1), (B, D), jnp.float32).astype(dtype)
+    out = ops.scatter_add(table, ids, grads, use_pallas=True, interpret=True)
+    expect = ref.scatter_add_ref(table, ids, grads)
+    atol = 1e-5 if dtype == jnp.float32 else 0.1
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=atol, rtol=atol
+    )
+
+
+@given(st.integers(1, 40), st.integers(2, 30))
+@settings(max_examples=20, deadline=None)
+def test_scatter_add_property(B, N):
+    key = jax.random.PRNGKey(B * 31 + N)
+    D = 128
+    table = jnp.zeros((N, D), jnp.float32)
+    ids = jax.random.randint(key, (B,), 0, N)
+    grads = jnp.ones((B, D), jnp.float32)
+    out = ops.scatter_add(table, ids, grads, use_pallas=True, interpret=True)
+    counts = np.bincount(np.asarray(ids), minlength=N).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), counts)
+
+
+# ---------------------------------------------------------------- adagrad
+@pytest.mark.parametrize("B,D", [(8, 128), (256, 512), (16, 1024)])
+def test_fused_adagrad(B, D):
+    key = jax.random.PRNGKey(B + D)
+    p = jax.random.normal(key, (B, D))
+    a = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (B, D)))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (B, D))
+    p1, a1 = adagrad_pallas(p, a, g, 0.1, interpret=True)
+    p2, a2 = ref.adagrad_ref(p, a, g, 0.1)
+    np.testing.assert_allclose(p1, p2, atol=1e-6)
+    np.testing.assert_allclose(a1, a2, atol=1e-6)
+
+
+# ---------------------------------------------------------------- attention
+CASES = [
+    # B, H, Hkv, Sq, Skv, Dh, causal, window, q_offset
+    (2, 4, 2, 128, 128, 32, True, 0, 0),
+    (1, 4, 1, 256, 256, 16, True, 0, 0),
+    (1, 2, 2, 128, 256, 32, False, 0, 0),
+    (2, 4, 2, 128, 256, 64, True, 64, 128),
+    (1, 1, 1, 1, 128, 32, True, 0, 127),
+    (1, 8, 4, 128, 128, 128, True, 32, 0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_vs_ref(case):
+    B, H, Hkv, Sq, Skv, Dh, causal, window, qoff = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(case[:6])), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, Dh))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=qoff, interpret=True
+    )
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window, q_offset=qoff)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_blockwise_attention_vs_ref(case):
+    B, H, Hkv, Sq, Skv, Dh, causal, window, qoff = case
+    ks = jax.random.split(jax.random.PRNGKey(1 + sum(case[:6])), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, Dh))
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, Dh))
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, Dh))
+    out = ops.attention_blockwise(q, k, v, causal=causal, window=window, q_offset=qoff, block_k=64)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window, q_offset=qoff)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_blockwise_gradients_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32))
+    k = jax.random.normal(ks[1], (1, 1, 64, 32))
+    v = jax.random.normal(ks[2], (1, 1, 64, 32))
+    g1 = jax.grad(lambda *a: ops.attention_blockwise(*a, causal=True, block_k=16).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: ref.attention_ref(*a, causal=True).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_custom_vjp_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 1, 128, 32))
+    v = jax.random.normal(ks[2], (1, 1, 128, 32))
+    g1 = jax.grad(lambda *a: ops.attention(*a, causal=True, impl="flash").sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: ref.attention_ref(*a, causal=True).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+def test_kv_len_masking_matches_truncation():
+    """kv_len masking == physically truncating the cache."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (2, 2, 1, 32))
+    k = jax.random.normal(ks[1], (2, 2, 64, 32))
+    v = jax.random.normal(ks[2], (2, 2, 64, 32))
+    out = ref.attention_ref(q, k, v, causal=False, kv_len=40)
+    exp = ref.attention_ref(q, k[:, :, :40], v[:, :, :40], causal=False)
+    np.testing.assert_allclose(out, exp, atol=1e-6)
+    out_b = ops.attention_blockwise(q, k, v, causal=False, kv_len=40, block_k=16)
+    np.testing.assert_allclose(out_b, exp, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- gmm (MoE)
+@pytest.mark.parametrize(
+    "E,K,N,sizes",
+    [
+        (4, 128, 128, [100, 0, 300, 56]),
+        (3, 256, 128, [128, 128, 128]),
+        (5, 128, 256, [7, 250, 1, 0, 130]),
+    ],
+)
+def test_gmm_vs_ref(E, K, N, sizes):
+    key = jax.random.PRNGKey(E * K + N)
+    T = sum(sizes)
+    x = jax.random.normal(key, (T, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, K, N)) * 0.1
+    gs = jnp.array(sizes, jnp.int32)
+    out = ops.gmm(x, w, gs, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(out, ref.gmm_ref(x, w, gs), atol=2e-4, rtol=2e-4)
+
+
+@given(st.lists(st.integers(0, 60), min_size=2, max_size=6))
+@settings(max_examples=10, deadline=None)
+def test_gmm_property_group_isolation(sizes):
+    """Zeroing one expert's weights zeroes exactly that group's rows."""
+    E = len(sizes)
+    T = sum(sizes)
+    if T == 0:
+        return
+    key = jax.random.PRNGKey(sum(sizes))
+    x = jax.random.normal(key, (T, 128))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, 128, 128))
+    w = w.at[0].set(0.0)
+    gs = jnp.array(sizes, jnp.int32)
+    out = np.asarray(ops.gmm(x, w, gs, use_pallas=True, interpret=True))
+    assert np.allclose(out[: sizes[0]], 0.0)
+    if T > sizes[0]:
+        assert not np.allclose(out[sizes[0] :], 0.0) or sizes[0] == T

@@ -1,0 +1,174 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+shape + finiteness asserts; decode parity where exactness is expected."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config, replace
+from repro.models import get_model
+from repro.train.optim import AdamW
+from repro.train.train_step import TrainSettings, make_lm_train_step, make_lm_train_step_hier
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(ks[2], (B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(ks[3], (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = replace(get_smoke_config(arch), embedding_mode="dense")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = batch["frames"]
+    if cfg.family == "vlm":
+        kwargs["image_embeds"] = batch["image_embeds"]
+    logits, aux = model.forward(cfg, params, batch["tokens"], **kwargs)
+    S_out = batch["tokens"].shape[1] + (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_dense(arch):
+    cfg = replace(get_smoke_config(arch), embedding_mode="dense")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    settings = TrainSettings(optimizer=AdamW(lr=1e-3), microbatches=2, remat=True)
+    step = jax.jit(make_lm_train_step(cfg, settings))
+    opt_state = settings.optimizer.init(params)
+    batch = make_batch(cfg, B=4, S=8)
+    new_params, _, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # parameters must actually change
+    moved = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), params, new_params),
+    )
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "olmoe-1b-7b", "whisper-tiny", "xlstm-1.3b", "hymba-1.5b"])
+def test_smoke_train_step_hier(arch):
+    cfg = get_smoke_config(arch)  # hier_ps default
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    settings = TrainSettings(optimizer=AdamW(lr=1e-3), microbatches=1)
+    step = jax.jit(make_lm_train_step_hier(cfg, settings))
+    opt_state = settings.optimizer.init(params)
+    batch = make_batch(cfg, B=2, S=8)
+    n_working = 64
+    batch["tokens"] = batch["tokens"] % n_working  # slots
+    wt = jax.random.normal(jax.random.PRNGKey(5), (n_working, cfg.d_model)) * 0.01
+    acc = jnp.zeros_like(wt)
+    _, _, metrics, new_wt, new_acc = step(params, opt_state, batch, wt, acc)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(jnp.abs(new_wt - wt).sum()) > 0
+    assert float(new_acc.sum()) > 0
+
+
+def test_transformer_decode_matches_forward():
+    from repro.models import transformer as T
+    from repro.models.attention import KVCache
+
+    cfg = replace(get_smoke_config("granite-20b"), embedding_mode="dense")
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full, _ = T.forward(cfg, params, tokens)
+    _, cache = T.prefill(cfg, params, tokens[:, : S - 1])
+    pad = lambda a: jnp.pad(a, ((0, 0),) * 3 + ((0, 1), (0, 0)))
+    dec, _ = T.decode_step(
+        cfg, params, tokens[:, S - 1 :], KVCache(pad(cache.k), pad(cache.v)), jnp.int32(S - 1)
+    )
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]), atol=2e-2, rtol=2e-2)
+
+
+def test_xlstm_decode_matches_forward_exactly():
+    from repro.models import xlstm as X
+
+    cfg = replace(get_smoke_config("xlstm-1.3b"), embedding_mode="dense")
+    params = X.init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    full, _ = X.forward(cfg, params, tokens, chunk=8)
+    cache = X.init_cache(cfg, 2)
+    outs = []
+    for t in range(16):
+        lg, cache = X.decode_step(cfg, params, tokens[:, t : t + 1], cache)
+        outs.append(lg)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, axis=1)), np.asarray(full), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_hymba_prefill_decode_continuity():
+    from repro.models import hymba as H
+
+    cfg = replace(get_smoke_config("hymba-1.5b"), embedding_mode="dense")
+    params = H.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full, _ = H.forward(cfg, params, tokens)
+    # prefill first S-1 tokens, then decode token S-1: must match forward
+    total = cfg.n_meta_tokens + S
+    _, cache = H.prefill(cfg, params, tokens[:, : S - 1], max_len=total)
+    dec, _ = H.decode_step(cfg, params, tokens[:, S - 1 :], cache, jnp.int32(total - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]), atol=3e-2, rtol=3e-2)
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    from repro.models import xlstm as X
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, H, S, dh = 2, 3, 64, 16
+    q = jax.random.normal(ks[0], (B, H, S, dh))
+    k = jax.random.normal(ks[1], (B, H, S, dh))
+    v = jax.random.normal(ks[2], (B, H, S, dh))
+    li = jax.random.normal(ks[3], (B, H, S)) * 2
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, S)) * 2)
+    h_seq, st_seq = X.mlstm_sequential(q, k, v, li, lf)
+    for chunk in (8, 32, 64):
+        h_chk, st_chk = X.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+        np.testing.assert_allclose(h_seq, h_chk, atol=2e-4, rtol=2e-4)
+        for a, b in zip(st_seq, st_chk):
+            np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_chunked_matches_recurrent():
+    from repro.models import mamba as M
+    from repro.models.common import init_params
+
+    params = init_params(M.mamba_schema(32, 4), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    din = params["out_proj"].shape[0]
+    xz = x @ params["in_proj"]
+    xin, _ = M._conv_causal(xz[..., :din], params["conv_w"], params["conv_b"])
+    xin = jax.nn.silu(xin)
+    dt, B_t, C_t, A = M._ssm_inputs(params, xin)
+    y_rec, h_rec = M._scan_recurrent(xin, dt, B_t, C_t, A, None)
+    y_chk, h_chk = M._scan_chunked(xin, dt, B_t, C_t, A, None, chunk=16)
+    np.testing.assert_allclose(y_rec, y_chk, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h_rec, h_chk, atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_flops_structure():
+    """Dispatch never routes more than capacity tokens to one expert."""
+    from repro.models import moe as MoE
+
+    cfg = get_smoke_config("olmoe-1b-7b")
+    C = MoE.expert_capacity(cfg, 64)
+    assert C >= 64 * cfg.top_k // cfg.n_experts
+    assert C % 8 == 0

