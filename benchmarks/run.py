@@ -2,10 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
 Set BENCH_QUICK=1 for a fast pass.
+
+``--smoke`` runs the MEM-PS hot-path bench alone in quick mode (<60s) and
+refreshes ``BENCH_mem_ps.json`` — the regression gate for PRs that touch
+the host hierarchy's batch path.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -15,20 +20,27 @@ MODULES = [
     "benchmarks.bench_pipeline_speedup",  # Table 4 / Fig 3a
     "benchmarks.bench_time_distribution",  # Fig 3c
     "benchmarks.bench_hbm_ps",  # Fig 4a
-    "benchmarks.bench_mem_ps",  # Fig 4b
+    "benchmarks.bench_mem_ps",  # Fig 4b + perf trajectory
     "benchmarks.bench_cache",  # Fig 4c
     "benchmarks.bench_ssd",  # Fig 5a
     "benchmarks.bench_scalability",  # Fig 5b
     "benchmarks.bench_kernels",  # kernel layer
 ]
 
+SMOKE_MODULES = ["benchmarks.bench_mem_ps"]
 
-def main() -> None:
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        # quick mode must be set before benchmarks.common is imported
+        os.environ["BENCH_QUICK"] = "1"
     import importlib
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in SMOKE_MODULES if smoke else MODULES:
         t0 = time.perf_counter()
         try:
             mod = importlib.import_module(mod_name)

@@ -59,10 +59,12 @@ class HierarchicalPS:
         flat = np.asarray(batch_keys, dtype=np.uint64).reshape(-1)
         uniq, inverse = np.unique(flat, return_inverse=True)
         rows = self.cluster.pull(uniq, requester=requester, pin=True)
+        # the pulled buffer is freshly allocated per batch, so the working
+        # set can view straight into it — no re-copy of the row data
         ws = WorkingSet(
             keys=uniq,
-            params=rows[:, : self.emb_dim].copy(),
-            opt_state=rows[:, self.emb_dim :].copy(),
+            params=rows if self.opt_dim == 0 else rows[:, : self.emb_dim],
+            opt_state=rows[:, self.emb_dim :],
             slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
             batch_id=self._batch_counter,
         )
@@ -86,8 +88,9 @@ class HierarchicalPS:
 
     def abort_batch(self, ws: WorkingSet) -> None:
         """Unpin without applying (failure path)."""
-        owners = self.cluster.owner_of(ws.keys)
+        order, bounds = self.cluster._partition(ws.keys)
+        sorted_keys = ws.keys[order]
         for node_id in range(self.cluster.n_nodes):
-            mask = owners == node_id
-            if mask.any() and self.cluster.nodes[node_id].alive:
-                self.cluster.nodes[node_id].mem.unpin(ws.keys[mask])
+            lo, hi = int(bounds[node_id]), int(bounds[node_id + 1])
+            if lo < hi and self.cluster.nodes[node_id].alive:
+                self.cluster.nodes[node_id].mem.unpin(sorted_keys[lo:hi])

@@ -24,7 +24,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.keys import key_to_node
+from repro.core.keys import key_to_node, partition_by_owner
 from repro.core.mem_ps import MemParameterServer
 from repro.core.ssd_ps import SSDParameterServer
 
@@ -128,39 +128,53 @@ class Cluster:
     def owner_of(self, keys: np.ndarray) -> np.ndarray:
         return key_to_node(keys, self.n_nodes)
 
+    def _partition(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Owner-sort once: (order, bounds) with one contiguous segment per
+        node — no per-node boolean-mask scans over the full key set."""
+        owners = self.owner_of(keys)
+        order, splits = partition_by_owner(keys, owners, self.n_nodes)
+        bounds = np.concatenate([[0], splits, [len(keys)]])
+        return order, bounds
+
     def pull(self, keys: np.ndarray, requester: int = 0, pin: bool = True) -> np.ndarray:
         """Partitioned pull: local shard from local MEM-PS/SSD-PS, remote
         shards from peer MEM-PS over the (simulated) network."""
         keys = np.asarray(keys, dtype=np.uint64)
-        owners = self.owner_of(keys)
-        out = np.empty((len(keys), self.dim), dtype=np.float32)
+        order, bounds = self._partition(keys)
+        sorted_keys = keys[order]
+        sorted_out = np.empty((len(keys), self.dim), dtype=np.float32)
         for node_id in range(self.n_nodes):
-            mask = owners == node_id
-            if not mask.any():
+            lo, hi = int(bounds[node_id]), int(bounds[node_id + 1])
+            if lo == hi:
                 continue
             t0 = time.perf_counter()
-            vals = self.nodes[node_id].pull(keys[mask], pin=pin)
+            vals = self.nodes[node_id].pull(sorted_keys[lo:hi], pin=pin)
             elapsed = time.perf_counter() - t0
             if node_id == requester:
                 self.pull_local_time += elapsed
             else:
                 # request keys out + rows back over the NIC
-                self.network.transfer(int(mask.sum()) * 8)
+                self.network.transfer((hi - lo) * 8)
                 self.network.transfer(vals.nbytes)
                 self.pull_remote_time += elapsed
-            out[mask] = vals
+            sorted_out[lo:hi] = vals
+        out = np.empty_like(sorted_out)
+        out[order] = sorted_out  # one scatter back into request order
         return out
 
     def push(self, keys: np.ndarray, values: np.ndarray, requester: int = 0, unpin: bool = True) -> None:
         keys = np.asarray(keys, dtype=np.uint64)
-        owners = self.owner_of(keys)
+        values = np.asarray(values, dtype=np.float32)
+        order, bounds = self._partition(keys)
+        sorted_keys = keys[order]
+        sorted_vals = values[order]
         for node_id in range(self.n_nodes):
-            mask = owners == node_id
-            if not mask.any():
+            lo, hi = int(bounds[node_id]), int(bounds[node_id + 1])
+            if lo == hi:
                 continue
             if node_id != requester:
-                self.network.transfer(int(mask.sum()) * (8 + 4 * self.dim))
-            self.nodes[node_id].push(keys[mask], values[mask], unpin=unpin)
+                self.network.transfer((hi - lo) * (8 + 4 * self.dim))
+            self.nodes[node_id].push(sorted_keys[lo:hi], sorted_vals[lo:hi], unpin=unpin)
 
     # ------------------------------------------------------------ lifecycle
     def flush_all(self) -> None:

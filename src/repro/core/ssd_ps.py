@@ -13,7 +13,11 @@ Design points taken directly from the paper / Appendix E:
   fraction exceeds 50%, which bounds total disk usage at <= 2x live bytes
   (1/0.5), plus one in-flight write batch.
 * The key->file map lives in memory (a descriptor is a few bytes/key; a node
-  only holds its key shard).
+  only holds its key shard). It is a batched open-addressing ``U64Index``
+  (DESIGN.md §5) storing ``file_id * file_capacity + row_in_file`` packed in
+  one int64, so read/write/compaction probe and repoint whole batches with
+  numpy ops — the only Python loops left iterate over *files* (the I/O
+  unit), never over keys.
 
 Values are float32 rows of fixed width ``dim`` (embedding row [+ optimizer
 slots] — exactly the paper's fixed-size-value observation that lets the
@@ -33,6 +37,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.hash_index import U64Index
 from repro.core.keys import deterministic_init
 
 _MAGIC = 0x55D9A5
@@ -96,8 +101,8 @@ class SSDParameterServer:
         self.auto_compact = auto_compact
         self._next_file_id = 0
         self.files: dict[int, FileMeta] = {}
-        # key -> (file_id, row_in_file)
-        self.key_to_file: dict[int, tuple[int, int]] = {}
+        # key -> file_id * file_capacity + row_in_file (packed int64)
+        self.index = U64Index(4 * self.file_capacity)
         self.stats = SSDStats()
         self._lock = threading.RLock() if lock else threading.RLock()
 
@@ -148,12 +153,20 @@ class SSDParameterServer:
                 sl = slice(start, start + self.file_capacity)
                 k, v = keys[sl], values[sl]
                 fid = self._write_file(k, v)
-                # repoint mapping; old copies become stale
-                for row, key in enumerate(k.tolist()):
-                    old = self.key_to_file.get(key)
-                    if old is not None:
-                        self.files[old[0]].n_stale += 1
-                    self.key_to_file[key] = (fid, row)
+                # repoint mapping (batched); old copies become stale
+                uniq, first, inverse, cnt = np.unique(
+                    k, return_index=True, return_inverse=True, return_counts=True
+                )
+                old = self.index.lookup(uniq)
+                had = old >= 0
+                if had.any():
+                    for f, c in zip(*np.unique(old[had] // self.file_capacity, return_counts=True)):
+                        self.files[int(f)].n_stale += int(c)
+                # duplicate keys within one file: all but the last row stale
+                self.files[fid].n_stale += int((cnt - 1).sum())
+                last = np.empty(len(uniq), dtype=np.int64)
+                last[inverse] = np.arange(len(k))
+                self.index.set(uniq, fid * self.file_capacity + last)
             if self.auto_compact:
                 self.compact()
 
@@ -164,29 +177,28 @@ class SSDParameterServer:
         out = np.empty((len(keys), self.dim), dtype=np.float32)
         with self._lock:
             self.stats.rows_requested += len(keys)
-            by_file: dict[int, list[int]] = {}
-            missing: list[int] = []
-            locs = [self.key_to_file.get(int(k)) for k in keys]
-            for i, loc in enumerate(locs):
-                if loc is None:
-                    missing.append(i)
-                else:
-                    by_file.setdefault(loc[0], []).append(i)
-            for fid, idxs in by_file.items():
-                _, vals = self._read_file(fid)  # file = I/O unit
-                rows = np.fromiter((locs[i][1] for i in idxs), dtype=np.int64)
-                out[np.asarray(idxs, dtype=np.int64)] = vals[rows]
-            if missing:
-                midx = np.asarray(missing, dtype=np.int64)
-                fresh = np.zeros((len(midx), self.dim), dtype=np.float32)
+            locs = self.index.lookup(keys)
+            found = np.nonzero(locs >= 0)[0]
+            if found.size:
+                floc = locs[found]
+                order = np.argsort(floc, kind="stable")  # groups by file id
+                floc, found = floc[order], found[order]
+                fids = floc // self.file_capacity
+                starts = np.concatenate([[0], np.nonzero(np.diff(fids))[0] + 1, [len(fids)]])
+                for s, e in zip(starts[:-1], starts[1:]):
+                    _, vals = self._read_file(int(fids[s]))  # file = I/O unit
+                    out[found[s:e]] = vals[floc[s:e] % self.file_capacity]
+            missing = locs < 0
+            if missing.any():
+                fresh = np.zeros((int(missing.sum()), self.dim), dtype=np.float32)
                 fresh[:, : self.init_cols] = deterministic_init(
-                    keys[midx], self.init_cols, self.init_scale
+                    keys[missing], self.init_cols, self.init_scale
                 )
-                out[midx] = fresh
+                out[missing] = fresh
         return out
 
     def contains(self, key: int) -> bool:
-        return int(key) in self.key_to_file
+        return bool(self.index.contains(np.asarray([key], dtype=np.uint64))[0])
 
     # ---------------------------------------------------------- compaction
     def compact(self, force: bool = False) -> int:
@@ -208,11 +220,8 @@ class SSDParameterServer:
             live_vals: list[np.ndarray] = []
             for meta in victims:
                 fkeys, fvals = self._read_file(meta.file_id)
-                mask = np.fromiter(
-                    (self.key_to_file.get(int(k)) == (meta.file_id, r) for r, k in enumerate(fkeys)),
-                    dtype=bool,
-                    count=len(fkeys),
-                )
+                current = meta.file_id * self.file_capacity + np.arange(len(fkeys))
+                mask = self.index.lookup(fkeys) == current
                 if mask.any():
                     live_keys.append(fkeys[mask])
                     live_vals.append(fvals[mask])
@@ -224,8 +233,7 @@ class SSDParameterServer:
                     sl = slice(start, start + self.file_capacity)
                     k, v = all_k[sl], all_v[sl]
                     fid = self._write_file(k, v)
-                    for row, key in enumerate(k.tolist()):
-                        self.key_to_file[key] = (fid, row)
+                    self.index.set(k, fid * self.file_capacity + np.arange(len(k)))
             for meta in victims:
                 os.remove(meta.path)
                 del self.files[meta.file_id]
@@ -236,7 +244,7 @@ class SSDParameterServer:
     # -------------------------------------------------------------- info
     @property
     def n_live_rows(self) -> int:
-        return len(self.key_to_file)
+        return len(self.index)
 
     @property
     def n_disk_rows(self) -> int:
@@ -251,12 +259,16 @@ class SSDParameterServer:
 
     # ------------------------------------------------------- checkpointing
     def manifest(self) -> dict:
+        keys, locs = self.index.items()
         return {
             "dim": self.dim,
             "file_capacity": self.file_capacity,
             "next_file_id": self._next_file_id,
             "files": {fid: (m.path, m.n_rows, m.n_stale) for fid, m in self.files.items()},
-            "key_to_file": dict(self.key_to_file),
+            "key_to_file": {
+                int(k): (int(l) // self.file_capacity, int(l) % self.file_capacity)
+                for k, l in zip(keys.tolist(), locs.tolist())
+            },
         }
 
     @classmethod
@@ -267,7 +279,14 @@ class SSDParameterServer:
             int(fid): FileMeta(int(fid), path, n_rows, n_stale)
             for fid, (path, n_rows, n_stale) in manifest["files"].items()
         }
-        ps.key_to_file = {int(k): (int(f), int(r)) for k, (f, r) in manifest["key_to_file"].items()}
+        k2f = manifest["key_to_file"]
+        keys = np.fromiter((int(k) for k in k2f), dtype=np.uint64, count=len(k2f))
+        locs = np.fromiter(
+            (int(f) * ps.file_capacity + int(r) for f, r in k2f.values()),
+            dtype=np.int64,
+            count=len(k2f),
+        )
+        ps.index.insert(keys, locs)
         return ps
 
     def iter_live(self, chunk: int = 65536):
@@ -275,10 +294,7 @@ class SSDParameterServer:
         with self._lock:
             for fid in list(self.files):
                 fkeys, fvals = self._read_file(fid)
-                mask = np.fromiter(
-                    (self.key_to_file.get(int(k)) == (fid, r) for r, k in enumerate(fkeys)),
-                    dtype=bool,
-                    count=len(fkeys),
-                )
+                current = fid * self.file_capacity + np.arange(len(fkeys))
+                mask = self.index.lookup(fkeys) == current
                 if mask.any():
                     yield fkeys[mask], fvals[mask]

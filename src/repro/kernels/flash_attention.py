@@ -146,9 +146,9 @@ def flash_attention_pallas(
         out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((bq, 128), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, 128), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, Dh), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v)

@@ -67,7 +67,7 @@ def gmm_pallas(
                 pl.BlockSpec((1, bk, bn), lambda i, j, k, gid: (gid[i], k, j)),
             ],
             out_specs=pl.BlockSpec((bt, bn), lambda i, j, k, gid: (i, j)),
-            scratch_shapes=[pltpu.MemorySpace.VMEM((bt, bn), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((T, N), x.dtype),
         interpret=interpret,

@@ -177,6 +177,15 @@ class Roofline:
         return d
 
 
+def flat_cost(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a dict: some jax versions
+    return the per-computation ``[dict]`` form instead of a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 def analyze(arch, shape, mesh_name, compiled, model_flops_global, n_chips, compile_seconds=0.0) -> Roofline:
     """Roofline terms from the partitioned module, trip-count corrected.
 
@@ -186,7 +195,7 @@ def analyze(arch, shape, mesh_name, compiled, model_flops_global, n_chips, compi
     """
     from repro.launch.hlo_analysis import analyze_text
 
-    flat = compiled.cost_analysis()
+    flat = flat_cost(compiled)
     text = compiled.as_text()
     hc = analyze_text(text)
     flops = float(hc.dot_flops)

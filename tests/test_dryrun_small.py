@@ -41,7 +41,7 @@ def test_cell_lowers_and_compiles(arch, kind, mesh):
     fn, args, shards = DR.build_cell(cfg, shape, mesh)
     with mesh:
         compiled = jax.jit(fn, in_shardings=shards).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = rl.flat_cost(compiled)
     assert cost.get("flops", 0) > 0
     stats = rl.parse_collectives(compiled.as_text())
     assert stats.total_bytes > 0, "sharded program must communicate"

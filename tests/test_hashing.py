@@ -1,8 +1,12 @@
 """OP+OSRP invariants."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # not installed: deterministic fixed-seed fallback
+    from repro.testing.hypothesis_fallback import given, settings, st
 
 from repro.core.hashing import OPOSRP
 

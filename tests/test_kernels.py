@@ -4,8 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # not installed: deterministic fixed-seed fallback
+    from repro.testing.hypothesis_fallback import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.embedding_lookup import embedding_lookup_pallas

@@ -62,6 +62,44 @@ def test_hit_rate_on_zipf_traffic(tmp_path):
     assert mem.stats.hit_rate > 0.3  # hot keys get captured (paper Fig 4c)
 
 
+def test_all_pinned_raises_until_unpin(stack):
+    """Working set above capacity with every row pinned must raise the
+    documented MemoryError; unpin must make the cache usable again."""
+    ssd, mem = stack
+    resident = np.arange(32, dtype=np.uint64)
+    mem.pull(resident, pin=True)  # fill the cache, all pinned
+    with pytest.raises(MemoryError):
+        mem.pull(np.arange(100, 108, dtype=np.uint64), pin=True)
+    with pytest.raises(MemoryError):  # fresh pushes need rows too
+        mem.push(np.arange(200, 208, dtype=np.uint64), np.zeros((8, 4), np.float32))
+    mem.unpin(resident[:8])
+    got = mem.pull(np.arange(100, 108, dtype=np.uint64), pin=False)  # progress
+    assert got.shape == (8, 4)
+    # the still-pinned rows survived the eviction pressure as cache hits
+    np.testing.assert_allclose(
+        mem.pull(resident[8:], pin=False), mem.pull(resident[8:], pin=False)
+    )
+    assert mem.stats.hits >= 2 * len(resident[8:])
+
+
+def test_dirty_row_bounced_through_pending_keeps_update(tmp_path):
+    """A dirty row evicted into the write buffer, re-pulled, re-evicted and
+    finally flushed must never lose its update (repeatedly bounced)."""
+    ssd = SSDParameterServer(str(tmp_path), dim=4, file_capacity=8)
+    mem = MemParameterServer(ssd, capacity=8, flush_batch=10_000)
+    k = np.array([3], dtype=np.uint64)
+    v = mem.pull(k)
+    mem.push(k, v + 5)
+    for bounce in range(4):
+        # churn unpinned traffic until k is evicted into _pending
+        for s in range(1000 * (bounce + 1), 1000 * (bounce + 1) + 12 * 8, 8):
+            mem.pull(np.arange(s, s + 6, dtype=np.uint64), pin=False)
+        got = mem.pull(k, pin=False)  # back from the pending buffer
+        np.testing.assert_allclose(got, v + 5)
+    mem.flush_all()
+    np.testing.assert_allclose(ssd.read_batch(k), v + 5)
+
+
 def test_pending_flush_readback(tmp_path):
     """A dirty row evicted into the write buffer must still read correctly."""
     ssd = SSDParameterServer(str(tmp_path), dim=2, file_capacity=8)

@@ -1,0 +1,332 @@
+"""Model-based parity: vectorized MEM-PS vs a reference dict model.
+
+The vectorized ``MemParameterServer`` replaces per-key OrderedDict/dict
+bookkeeping with batched numpy structures. Its visible semantics (the
+canonical Appendix-D batch contract documented in mem_ps.py) are pinned
+here by an independent sequential implementation — plain dicts, plain
+Python loops — driven side by side over randomized mixed-operation traces.
+
+After every operation we assert identical:
+
+* returned rows (bit-for-bit);
+* hit/miss/demotion/eviction/flush counters;
+* full cached state (per-key freq, pin count, dirty bit, tier, value) and
+  staging-buffer state via ``debug_snapshot``;
+* MemoryError behaviour under pin pressure;
+
+and at the end of each trace, identical SSD-visible state.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.mem_ps import MemParameterServer, MemStats
+from repro.core.ssd_ps import SSDParameterServer
+
+
+class _Ent:
+    __slots__ = ("freq", "pins", "dirty", "tier", "last_used", "lfu_time", "value")
+
+    def __init__(self):
+        self.freq = 0
+        self.pins = 0
+        self.dirty = False
+        self.tier = "lru"
+        self.last_used = 0
+        self.lfu_time = 0
+        self.value = None
+
+
+class RefMemPS:
+    """Sequential dict-model of the canonical MEM-PS batch semantics."""
+
+    def __init__(self, ssd, capacity, lru_frac=0.5, flush_batch=2048):
+        self.ssd = ssd
+        self.dim = ssd.dim
+        self.capacity = int(capacity)
+        self.lru_capacity = max(1, int(capacity * lru_frac))
+        self.flush_batch = int(flush_batch)
+        self.entries: dict[int, _Ent] = {}
+        self.pending: dict[int, np.ndarray] = {}
+        self.clock = 0
+        self.stats = MemStats()
+
+    # ------------------------------------------------------------ internals
+    def _evictable(self) -> int:
+        return sum(1 for e in self.entries.values() if e.pins == 0)
+
+    def _evict(self, need: int) -> None:
+        lfu = sorted(
+            (e.freq, e.lfu_time, k)
+            for k, e in self.entries.items()
+            if e.tier == "lfu" and e.pins == 0
+        )
+        victims = [k for _, _, k in lfu[:need]]
+        self.stats.evict_lfu_to_ssd += len(victims)
+        if len(victims) < need:
+            lru = sorted(
+                (e.last_used, k)
+                for k, e in self.entries.items()
+                if e.tier == "lru" and e.pins == 0
+            )
+            victims += [k for _, k in lru[: need - len(victims)]]
+        for k in victims:
+            e = self.entries.pop(k)
+            if e.dirty:
+                self.pending[k] = e.value.copy()
+        if len(self.pending) >= self.flush_batch:
+            self._flush_pending()
+
+    def _shrink_lru(self) -> None:
+        n_lru = sum(1 for e in self.entries.values() if e.tier == "lru")
+        excess = n_lru - self.lru_capacity
+        if excess <= 0:
+            return
+        unpinned = sorted(
+            (e.last_used, k)
+            for k, e in self.entries.items()
+            if e.tier == "lru" and e.pins == 0
+        )
+        for _, k in unpinned[:excess]:
+            e = self.entries[k]
+            e.tier = "lfu"
+            e.lfu_time = self.clock
+            self.clock += 1
+            self.stats.evict_lru_to_lfu += 1
+
+    def _flush_pending(self) -> None:
+        if not self.pending:
+            return
+        ks = np.fromiter(self.pending.keys(), np.uint64, len(self.pending))
+        self.ssd.write_batch(ks, np.stack([self.pending[int(k)] for k in ks]))
+        self.stats.flushed_rows += len(ks)
+        self.pending.clear()
+
+    # ------------------------------------------------------------ interface
+    def pull(self, keys, pin=True):
+        keys = np.asarray(keys, np.uint64).reshape(-1)
+        uniq, first_idx, inverse, counts = np.unique(
+            keys, return_index=True, return_inverse=True, return_counts=True
+        )
+        base = self.clock
+        self.clock += len(keys)
+        out_u = np.empty((len(uniq), self.dim), np.float32)
+        absent = []
+        for i, k in enumerate(uniq.tolist()):
+            e = self.entries.get(k)
+            if e is None:
+                absent.append(i)
+                continue
+            c = int(counts[i])
+            self.stats.hits += c
+            e.freq += c
+            e.tier = "lru"  # re-visits promote LFU rows back into LRU
+            e.last_used = base + int(first_idx[i])
+            if pin:
+                e.pins += c
+            out_u[i] = e.value
+        absent.sort(key=lambda i: int(first_idx[i]))
+        while absent:
+            free = self.capacity - len(self.entries)
+            avail = free + self._evictable()
+            if avail == 0:
+                raise MemoryError("all rows pinned")
+            chunk, absent = absent[:avail], absent[avail:]
+            if len(chunk) > free:
+                self._evict(len(chunk) - free)
+            miss = [int(uniq[i]) for i in chunk if int(uniq[i]) not in self.pending]
+            vals = {}
+            if miss:
+                arr = self.ssd.read_batch(np.asarray(miss, np.uint64))
+                vals = {k: arr[j] for j, k in enumerate(miss)}
+            for i in chunk:
+                k, c = int(uniq[i]), int(counts[i])
+                e = _Ent()
+                if k in self.pending:
+                    self.stats.hits += c
+                    e.value = self.pending.pop(k)
+                    e.dirty = True
+                else:
+                    self.stats.misses += c
+                    e.value = np.array(vals[k], np.float32)
+                e.freq = c
+                e.pins = c if pin else 0
+                e.last_used = base + int(first_idx[i])
+                self.entries[k] = e
+                out_u[i] = e.value
+        self._shrink_lru()
+        return out_u[inverse]
+
+    def push(self, keys, values, unpin=True):
+        keys = np.asarray(keys, np.uint64).reshape(-1)
+        values = np.asarray(values, np.float32).reshape(len(keys), -1)
+        uniq, first_idx, inverse, counts = np.unique(
+            keys, return_index=True, return_inverse=True, return_counts=True
+        )
+        base = self.clock
+        self.clock += len(keys)
+        last_idx = np.empty(len(uniq), np.int64)
+        last_idx[inverse] = np.arange(len(keys))  # last occurrence wins
+        absent = []
+        for i, k in enumerate(uniq.tolist()):
+            e = self.entries.get(k)
+            if e is None:
+                absent.append(i)
+                continue
+            e.value = np.array(values[last_idx[i]], np.float32)
+            e.dirty = True
+            if unpin:
+                e.pins = max(e.pins - int(counts[i]), 0)
+        absent.sort(key=lambda i: int(first_idx[i]))
+        while absent:
+            free = self.capacity - len(self.entries)
+            avail = free + self._evictable()
+            if avail == 0:
+                raise MemoryError("all rows pinned")
+            chunk, absent = absent[:avail], absent[avail:]
+            for i in chunk:  # pushed value supersedes any staged copy
+                self.pending.pop(int(uniq[i]), None)
+            if len(chunk) > free:
+                self._evict(len(chunk) - free)
+            for i in chunk:
+                k = int(uniq[i])
+                e = _Ent()
+                e.value = np.array(values[last_idx[i]], np.float32)
+                e.freq = 1
+                e.dirty = True
+                e.last_used = base + int(first_idx[i])
+                self.entries[k] = e
+        self._shrink_lru()
+
+    def unpin(self, keys):
+        keys = np.asarray(keys, np.uint64).reshape(-1)
+        uniq, counts = np.unique(keys, return_counts=True)
+        for k, c in zip(uniq.tolist(), counts.tolist()):
+            e = self.entries.get(k)
+            if e is not None:
+                e.pins = max(e.pins - c, 0)
+
+    def flush_all(self):
+        dirty = [(k, e) for k, e in self.entries.items() if e.dirty]
+        if dirty:
+            ks = np.asarray([k for k, _ in dirty], np.uint64)
+            self.ssd.write_batch(ks, np.stack([e.value for _, e in dirty]))
+            self.stats.flushed_rows += len(dirty)
+            for _, e in dirty:
+                e.dirty = False
+        self._flush_pending()
+
+    def debug_snapshot(self):
+        cached = {
+            k: (e.freq, e.pins, e.dirty, e.tier, tuple(float(x) for x in e.value))
+            for k, e in self.entries.items()
+        }
+        pending = {k: tuple(float(x) for x in v) for k, v in self.pending.items()}
+        return cached, pending
+
+
+# --------------------------------------------------------------------------
+# trace driver
+# --------------------------------------------------------------------------
+
+DIM = 3
+CAPACITY = 24
+KEY_SPACE = 60
+FLUSH_BATCH = 8
+
+
+def _stats_tuple(s):
+    return (s.hits, s.misses, s.evict_lru_to_lfu, s.evict_lfu_to_ssd, s.flushed_rows)
+
+
+def _assert_same_state(vec, ref, step):
+    assert _stats_tuple(vec.stats) == _stats_tuple(ref.stats), f"stats @ op {step}"
+    vc, vp = vec.debug_snapshot()
+    rc, rp = ref.debug_snapshot()
+    assert vc == rc, f"cached state @ op {step}"
+    assert vp == rp, f"pending state @ op {step}"
+    assert vec.n_cached == len(ref.entries)
+
+
+def _run_trace(tmp_path, seed, n_ops):
+    ssd_v = SSDParameterServer(str(tmp_path / f"v{seed}"), dim=DIM, file_capacity=8)
+    ssd_r = SSDParameterServer(str(tmp_path / f"r{seed}"), dim=DIM, file_capacity=8)
+    vec = MemParameterServer(ssd_v, CAPACITY, flush_batch=FLUSH_BATCH)
+    ref = RefMemPS(ssd_r, CAPACITY, flush_batch=FLUSH_BATCH)
+    rng = np.random.default_rng(seed)
+    raised = 0
+    for step in range(n_ops):
+        op = rng.choice(
+            ["pull_pin", "pull", "push", "unpin", "flush", "big_pull"],
+            p=[0.25, 0.25, 0.25, 0.15, 0.05, 0.05],
+        )
+        keys = rng.integers(0, KEY_SPACE, size=int(rng.integers(1, 12))).astype(np.uint64)
+        if op == "big_pull":  # unpinned batch larger than the whole cache
+            keys = rng.permutation(KEY_SPACE).astype(np.uint64)[: CAPACITY + 10]
+        vals = rng.standard_normal((len(keys), DIM)).astype(np.float32)
+
+        def apply(m):
+            if op in ("pull_pin", "pull", "big_pull"):
+                return m.pull(keys, pin=op == "pull_pin")
+            if op == "push":
+                return m.push(keys, vals)
+            if op == "unpin":
+                return m.unpin(keys)
+            return m.flush_all()
+
+        results, errors = [], []
+        for m in (vec, ref):
+            try:
+                results.append(apply(m))
+                errors.append(None)
+            except MemoryError as e:
+                results.append(None)
+                errors.append(e)
+        assert (errors[0] is None) == (errors[1] is None), f"MemoryError parity @ op {step}"
+        if errors[0] is not None:
+            raised += 1
+        elif results[0] is not None:
+            np.testing.assert_array_equal(results[0], results[1], err_msg=f"pull @ op {step}")
+        _assert_same_state(vec, ref, step)
+    vec.flush_all()
+    ref.flush_all()
+    _assert_same_state(vec, ref, "final")
+    universe = np.arange(KEY_SPACE, dtype=np.uint64)
+    np.testing.assert_array_equal(
+        ssd_v.read_batch(universe), ssd_r.read_batch(universe), err_msg="SSD state"
+    )
+    assert ssd_v.n_live_rows == ssd_r.n_live_rows
+    return vec, raised
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_randomized_trace_parity(tmp_path, seed):
+    """>=1000 mixed ops across the three seeds, identical visible state."""
+    vec, _ = _run_trace(tmp_path, seed, n_ops=400)
+    s = vec.stats
+    # the trace must actually exercise the interesting machinery
+    assert s.hits > 0 and s.misses > 0
+    assert s.evict_lru_to_lfu > 0 and s.evict_lfu_to_ssd > 0
+    assert s.flushed_rows > 0
+
+
+def test_pin_pressure_memoryerror_parity(tmp_path):
+    """Both models raise MemoryError at the same point, and agree after."""
+    ssd_v = SSDParameterServer(str(tmp_path / "v"), dim=DIM, file_capacity=8)
+    ssd_r = SSDParameterServer(str(tmp_path / "r"), dim=DIM, file_capacity=8)
+    vec = MemParameterServer(ssd_v, 16, flush_batch=FLUSH_BATCH)
+    ref = RefMemPS(ssd_r, 16, flush_batch=FLUSH_BATCH)
+    keys = np.arange(16, dtype=np.uint64)
+    np.testing.assert_array_equal(vec.pull(keys, pin=True), ref.pull(keys, pin=True))
+    overflow = np.arange(16, 26, dtype=np.uint64)
+    with pytest.raises(MemoryError):
+        vec.pull(overflow, pin=True)
+    with pytest.raises(MemoryError):
+        ref.pull(overflow, pin=True)
+    _assert_same_state(vec, ref, "after MemoryError")
+    vec.unpin(keys)
+    ref.unpin(keys)
+    np.testing.assert_array_equal(
+        vec.pull(overflow, pin=False), ref.pull(overflow, pin=False)
+    )
+    _assert_same_state(vec, ref, "after unpin recovery")
