@@ -3,17 +3,35 @@
 The paper compares 4 GPU nodes against a 75-150 node MPI CPU cluster; on one
 host we reproduce the *architectural* speedups that produce that number:
 
-  (a) pipelined 4-stage execution vs serial staging (overlap win);
+  (a) pipelined 4-stage execution vs serial staging (overlap win) — since
+      PR-2 the overlap is lossless (bitwise-equal to serial) thanks to
+      conflict-aware pulls with per-key version forwarding and the
+      device-resident working-set (HBM-PS copy) serving adjacent-batch keys;
   (b) hierarchical working-set pull vs full-table scatter/gather per batch
       (the "GPU parameter server vs flat parameter server" win) — the flat
       baseline moves/updates the WHOLE table every batch, as an in-memory
-      distributed PS must.
+      distributed PS must;
+  (c) traffic saved by the same mechanism: conflict rows are forwarded or
+      device-served instead of re-pulled (host/NIC bytes) and rows shared
+      between consecutive batches stay device-resident (host->device bytes).
 
-Times are wall-clock on this host; the derived column reports the speedup.
+The headline overlap number comes from the ``storage`` model: its key space
+(8M) dwarfs the MEM-PS cache, so pull/push does real SSD-PS work per batch —
+the paper's operating point (a 10TB model never fits DRAM), and the regime
+the pipeline exists to hide. The DRAM-resident SCALED models are reported
+too: after warm-up their whole table is cached, so they are train-bound and
+the overlap win is structurally small — that contrast is itself Fig-3c's
+point. Each (serial, pipelined) pair is timed in alternation ``repeats``
+times and the best ratio is kept (the container is a noisy neighbour).
+
+Results land in ``BENCH_pipeline.json`` at the repo root — the regression
+record for PRs touching the pipeline/overlap path.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -21,53 +39,98 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import QUICK, emit, note
-from repro.configs.ctr_models import SCALED, CTRConfig
+from repro.configs.ctr_models import SCALED, STORAGE_BENCH, CTRConfig
 from repro.core.node import Cluster
 from repro.data.synthetic_ctr import SyntheticCTRStream
 from repro.train.trainer import CTRTrainer, TrainerConfig
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
 
-def run_model(tag: str, cfg: CTRConfig, tmp: str, n_batches: int) -> None:
-    # pipeline keeps up to ~3 batches' working sets pinned concurrently
-    working_bound = min(cfg.n_sparse_keys, cfg.batch_size * cfg.nnz_per_example)
+
+def run_model(tag: str, cfg: CTRConfig, tmp: str, n_batches: int, storage: bool) -> dict:
+    repeats = 2 if QUICK else 3
 
     def fresh_cluster(sub):
-        return Cluster(
-            2, f"{tmp}/{tag}_{sub}", dim=cfg.emb_dim * 2,
-            cache_capacity=2 * working_bound,
-            file_capacity=4096, init_cols=cfg.emb_dim,
-        )
+        if storage:
+            # cache is ~2.5% of the key space: every batch's pull/push hits
+            # the SSD-PS (reads for misses, flushes for dirty evictions)
+            return Cluster(2, f"{tmp}/{tag}_{sub}", dim=cfg.emb_dim * 2,
+                           cache_capacity=100_000, file_capacity=65536,
+                           init_cols=cfg.emb_dim)
+        # DRAM-resident: room for the pipeline's concurrently pinned sets
+        working_bound = min(cfg.n_sparse_keys, cfg.batch_size * cfg.nnz_per_example)
+        return Cluster(2, f"{tmp}/{tag}_{sub}", dim=cfg.emb_dim * 2,
+                       cache_capacity=2 * working_bound, file_capacity=4096,
+                       init_cols=cfg.emb_dim)
 
-    stream = lambda: SyntheticCTRStream(
-        cfg.n_sparse_keys, cfg.nnz_per_example, cfg.n_slots, cfg.batch_size, seed=3
-    )
+    def fresh_stream():
+        return SyntheticCTRStream(cfg.n_sparse_keys, cfg.nnz_per_example,
+                                  cfg.n_slots, cfg.batch_size, seed=3)
 
-    # serial
-    tr = CTRTrainer(cfg, fresh_cluster("serial"), TrainerConfig())
-    tr.run(stream(), 2, pipelined=False)  # warm compile
-    t0 = time.perf_counter()
-    tr.run(stream(), n_batches, pipelined=False)
-    t_serial = time.perf_counter() - t0
+    tr_s = CTRTrainer(cfg, fresh_cluster("serial"), TrainerConfig())
+    tr_p = CTRTrainer(cfg, fresh_cluster("pipe"), TrainerConfig())
+    if storage:
+        # one CONTINUING stream per mode: restarting would replay the warm
+        # keys and quietly turn the workload DRAM-resident again
+        s_stream, p_stream = fresh_stream(), fresh_stream()
+        stream_s = lambda: s_stream
+        stream_p = lambda: p_stream
+    else:
+        stream_s = stream_p = fresh_stream
 
-    # pipelined
-    tr2 = CTRTrainer(cfg, fresh_cluster("pipe"), TrainerConfig())
-    tr2.run(stream(), 2, pipelined=True)
-    t0 = time.perf_counter()
-    tr2.run(stream(), n_batches, pipelined=True)
-    t_pipe = time.perf_counter() - t0
+    tr_s.run(stream_s(), max(2, n_batches // 2), pipelined=False)  # warm
+    tr_p.run(stream_p(), max(2, n_batches // 2), pipelined=True)
+    ratios, t_s_best, t_p_best = [], float("inf"), float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        tr_s.run(stream_s(), n_batches, pipelined=False)
+        t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tr_p.run(stream_p(), n_batches, pipelined=True)
+        t_pipe = time.perf_counter() - t0
+        ratios.append(t_serial / t_pipe)
+        t_s_best, t_p_best = min(t_s_best, t_serial), min(t_p_best, t_pipe)
 
+    # best serial vs best pipelined: symmetric under noise, unlike taking
+    # the single best same-rep ratio (an upward-biased estimator)
+    speedup = t_s_best / t_p_best
+    ps, dw = tr_p.ps.stats, tr_p.dev_ws.stats
+    per_batch = lambda v: v / max(1, ps.batches_prepared)
     emit(
         f"table4.pipeline.{tag}",
-        t_pipe / n_batches * 1e6,
-        f"speedup_vs_serial={t_serial / t_pipe:.2f}x",
+        t_p_best / n_batches * 1e6,
+        f"speedup_vs_serial={speedup:.2f}x;ratios={'/'.join(f'{r:.2f}' for r in ratios)}",
     )
+    emit(
+        f"table4.pull_saved.{tag}",
+        per_batch(ps.pull_bytes_saved),
+        f"rows_forwarded={ps.rows_forwarded};rows_device_served={ps.rows_device_served}"
+        f";dev_bytes_saved_per_batch={per_batch(dw.bytes_saved):.0f}",
+    )
+    result = {
+        "n_batches": n_batches,
+        "storage_bound": storage,
+        "serial_us_per_batch": t_s_best / n_batches * 1e6,
+        "pipelined_us_per_batch": t_p_best / n_batches * 1e6,
+        "speedup_vs_serial": speedup,
+        "speedup_ratios": ratios,
+        "pull_bytes_saved_per_batch": per_batch(ps.pull_bytes_saved),
+        "rows_forwarded": ps.rows_forwarded,
+        "rows_device_served": ps.rows_device_served,
+        "device_bytes_saved_per_batch": per_batch(dw.bytes_saved),
+        "rows_reused_on_device": dw.rows_reused,
+    }
+
+    if storage:
+        return result  # a full-table flat pull of 8M keys is not a baseline
 
     # flat-PS baseline: full-table pull+push per batch (what an in-memory
     # distributed PS does), same device math
     cl = fresh_cluster("flat")
     all_keys = np.arange(cfg.n_sparse_keys, dtype=np.uint64)
-    tr3 = CTRTrainer(cfg, cl, TrainerConfig())
-    s = stream()
+    # no device working-set reuse: a flat PS re-transfers everything
+    tr3 = CTRTrainer(cfg, cl, TrainerConfig(device_reuse=False))
+    s = fresh_stream()
 
     def flat_batch():
         b = s.next_batch()
@@ -83,22 +146,33 @@ def run_model(tag: str, cfg: CTRConfig, tmp: str, n_batches: int) -> None:
     for _ in range(n_flat):
         flat_batch()
     t_flat = time.perf_counter() - t0 + 1e-9
+    flat_speedup = t_flat / n_flat / (t_p_best / n_batches)
     emit(
         f"table4.workingset.{tag}",
-        t_pipe / n_batches * 1e6,
-        f"speedup_vs_flat_ps={t_flat / n_flat / (t_pipe / n_batches):.2f}x",
+        t_p_best / n_batches * 1e6,
+        f"speedup_vs_flat_ps={flat_speedup:.2f}x",
     )
+    result["speedup_vs_flat_ps"] = flat_speedup
+    return result
 
 
 def main() -> None:
     import tempfile
 
     note("Table 4: hierarchical+pipelined trainer vs serial and flat-PS baselines")
+    note("(lossless overlap: pipelined == serial bitwise; savings from conflict")
+    note(" forwarding + device working-set reuse; 'storage' = SSD-bound regime)")
     n = 6 if QUICK else 12
+    results: dict = {"quick": QUICK}
     with tempfile.TemporaryDirectory() as tmp:
-        models = ["A", "B"] if QUICK else ["A", "B", "C"]
+        results["storage"] = run_model("storage", STORAGE_BENCH, tmp, n, storage=True)
+        models = ["A"] if QUICK else ["A", "B", "C"]
         for tag in models:
-            run_model(tag, SCALED[tag], tmp, n)
+            results[tag] = run_model(tag, SCALED[tag], tmp, n, storage=False)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    note(f"recorded -> {os.path.normpath(BENCH_JSON)}")
 
 
 if __name__ == "__main__":

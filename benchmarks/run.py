@@ -3,9 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
 Set BENCH_QUICK=1 for a fast pass.
 
-``--smoke`` runs the MEM-PS hot-path bench alone in quick mode (<60s) and
-refreshes ``BENCH_mem_ps.json`` — the regression gate for PRs that touch
-the host hierarchy's batch path.
+``--smoke`` runs the MEM-PS hot-path bench and the pipeline-overlap bench
+in quick mode (a few minutes) and refreshes ``BENCH_mem_ps.json`` +
+``BENCH_pipeline.json`` — the regression gates for PRs that touch the host
+hierarchy's batch path or the pipeline/overlap path.
 """
 
 from __future__ import annotations
@@ -27,7 +28,7 @@ MODULES = [
     "benchmarks.bench_kernels",  # kernel layer
 ]
 
-SMOKE_MODULES = ["benchmarks.bench_mem_ps"]
+SMOKE_MODULES = ["benchmarks.bench_mem_ps", "benchmarks.bench_pipeline_speedup"]
 
 
 def main(argv: list[str] | None = None) -> None:

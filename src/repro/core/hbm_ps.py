@@ -13,21 +13,31 @@ Distribution across the ``model`` mesh axis mirrors the paper's per-GPU
 modulo partition: slot s lives on shard ``s % n_shards`` at local row
 ``s // n_shards``. Two exchange strategies are provided:
 
-* ``gather_psum`` — each shard contributes its owned rows, one ``psum``
+* ``get_psum`` — each shard contributes its owned rows, one ``psum``
   assembles the full row set on every shard (paper's all-reduce-style sync;
   2(S-1)/S * B * dim bytes per link).
-* ``gather_a2a`` — requests routed to owners and rows routed back with two
-  ``all_to_all`` ops (paper's NVLink p2p ``get``; B * dim * (S-1)/S bytes),
-  requires per-shard request lists of equal size (host pads).
+* ``get_a2a`` — requests routed to owners and rows routed back with two
+  ``all_to_all`` ops (paper's NVLink p2p ``get``; B * dim * (S-1)/S bytes);
+  requires per-shard request lists of equal size, which the host pads via
+  :func:`plan_a2a`. Output is requester-sharded: shard r ends holding the
+  rows for its B/S slice of the batch, exactly the paper's per-GPU pattern.
 
 ``accumulate`` in the distributed setting reduces gradient rows across the
 data axis (``psum``) and each shard applies only its owned rows — the same
 "synchronize after every mini-batch" semantics as Algorithm 1 line 14.
+
+On top of the per-batch table sits :class:`DeviceWorkingSet` — the paper's
+HBM-PS caching behaviour across batches: rows whose keys repeat in the next
+batch stay device-resident and are *slot-remapped* (a device gather), so the
+host only transfers the delta rows. On skewed (zipfian) CTR streams adjacent
+batches share most of their hot keys, making this the dominant PCIe/host
+traffic win.
 """
 
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import Literal
 
 import jax
@@ -36,6 +46,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.keys import member_sorted
 from repro.kernels import ops as kops
 
 
@@ -120,7 +131,6 @@ class ShardedWorkingTable:
             rows = jnp.where(owned[:, None], rows, 0.0)
             return jax.lax.psum(rows, self.axis)
 
-        spec_rest = [a for a in self.mesh.axis_names if a != self.axis]
         return shard_map(
             body,
             mesh=self.mesh,
@@ -150,3 +160,165 @@ class ShardedWorkingTable:
             out_specs=self.table_spec,
             check_rep=False,
         )(table, slots, grads)
+
+    # -- all_to_all exchange: requests to owners, rows back (p2p ``get``) --
+    def get_a2a(self, table: jax.Array, req: jax.Array, restore: jax.Array) -> jax.Array:
+        """Two-``all_to_all`` row exchange (paper's NVLink p2p pattern).
+
+        ``req``/``restore`` come from :func:`plan_a2a`: ``req[r, o]`` lists
+        the (padded, equal-length) slots requester shard r asks owner shard
+        o for, and ``restore[r]`` maps r's batch positions back into its
+        received rows. Returns the [B, d] rows requester-sharded over the
+        axis (shard r holds rows for its contiguous B/S slice of slots)."""
+        S = self.n_shards
+
+        def body(tbl, req_r, restore_r):
+            d = tbl.shape[-1]
+            m = req_r.shape[-1]
+            # a2a #1: route each requester's per-owner slot lists to owners
+            got = jax.lax.all_to_all(req_r, self.axis, split_axis=1, concat_axis=0, tiled=True)
+            local_rows = (got.reshape(S, m) // S).astype(jnp.int32)
+            rows = kops.embedding_lookup(tbl, local_rows.reshape(-1)).reshape(S, m, d)
+            # a2a #2: route the gathered rows back to their requesters
+            back = jax.lax.all_to_all(rows, self.axis, split_axis=0, concat_axis=0, tiled=True)
+            return back.reshape(S * m, d)[restore_r[0]]
+
+        return shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self.table_spec, P(self.axis, None, None), P(self.axis, None)),
+            out_specs=P(self.axis, None),
+            check_rep=False,
+        )(table, req, restore)
+
+
+def plan_a2a(slots: np.ndarray, n_shards: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side routing plan for :meth:`ShardedWorkingTable.get_a2a`.
+
+    Splits the batch into one contiguous chunk per requester shard and
+    groups each chunk's slots by owner shard, padding every (requester,
+    owner) request list to the same length m (pad entries request slot
+    ``o`` — owner o's local row 0 — and are dropped by ``restore``).
+
+    Returns (req [S, S, m] int32, restore [S, B//S] int32) with
+    ``restore[r, j]`` indexing into the [S*m] rows shard r receives.
+    """
+    slots = np.asarray(slots, dtype=np.int64)
+    S = n_shards
+    B = len(slots)
+    assert B % S == 0, f"batch {B} must pad to a multiple of {S} requesters"
+    chunk = B // S
+    # group by (requester, owner) in a few vectorized passes: a stable
+    # argsort on the pair id keeps each group's request order, cumsum gives
+    # group starts, and positions within a group follow by subtraction
+    owners = slots % S
+    pair = np.repeat(np.arange(S, dtype=np.int64), chunk) * S + owners
+    order = np.argsort(pair, kind="stable")
+    counts = np.bincount(pair, minlength=S * S)
+    m = max(1, int(counts.max()))
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    rank = np.arange(B, dtype=np.int64) - np.repeat(starts, counts)
+    req = np.tile(np.arange(S, dtype=np.int32), (S, 1))[:, :, None].repeat(m, axis=2)
+    req.reshape(S * S, m)[pair[order], rank] = slots[order]
+    restore = np.empty(B, dtype=np.int32)
+    restore[order] = owners[order] * m + rank
+    return req, restore.reshape(S, chunk)
+
+
+# --------------------------------------------------------------------------
+# cross-batch device working-set reuse (HBM-PS caching across batches)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ReusePlan:
+    """How to assemble one batch's device table from the previous one."""
+
+    n_working: int
+    seq: int  # device-table generation this plan expects to remap from
+    reuse_src: np.ndarray  # int32 — row in the PREVIOUS device table
+    reuse_dst: np.ndarray  # int32 — row in the new table (same key)
+    fresh_dst: np.ndarray  # int32 — new-table rows transferred from host
+
+    @property
+    def n_reused(self) -> int:
+        return len(self.reuse_src)
+
+
+@dataclass
+class ReuseStats:
+    batches: int = 0
+    rows_reused: int = 0
+    rows_transferred: int = 0
+    bytes_saved: int = 0  # host->device bytes avoided by on-device remap
+    bytes_transferred: int = 0
+
+
+class DeviceWorkingSet:
+    """Keeps consecutive batches' shared rows device-resident.
+
+    The MEM-PS renumbers each batch's keys to fresh contiguous slots, so a
+    key shared by batches i and i+1 lands at a *different* slot — but its
+    post-train value already lives in batch i's final device table. ``plan``
+    matches the new batch's (sorted, unique) keys against the previous
+    batch's and emits a slot remap; ``assemble`` builds the new table on
+    device from the remapped rows plus only the freshly-transferred delta.
+    Values are bitwise-identical to a full host pull because the final
+    device rows are exactly what the host push wrote back.
+    """
+
+    def __init__(self, row_bytes: int):
+        self.row_bytes = int(row_bytes)
+        self.stats = ReuseStats()
+        self._prev_keys: np.ndarray | None = None
+        self._seq = 0
+        self._last_ext_id: int | None = None
+        self._last_plan: ReusePlan | None = None
+
+    def reset(self) -> None:
+        """Invalidate residency (resume/restore or an aborted pipeline)."""
+        self._prev_keys = None
+        self._last_ext_id = None
+        self._last_plan = None
+
+    def plan(self, keys: np.ndarray, batch_id: int | None = None) -> ReusePlan:
+        """keys: sorted unique uint64 of the new batch. Updates state.
+
+        ``batch_id`` dedups a retried transfer stage: re-planning the same
+        batch would diff its keys against themselves (and skew the device
+        generation), so an immediate re-plan returns the original plan."""
+        if batch_id is not None and batch_id == self._last_ext_id:
+            return self._last_plan
+        n = len(keys)
+        prev = self._prev_keys
+        self._prev_keys = keys
+        self._seq += 1
+        self._last_ext_id = batch_id
+        self.stats.batches += 1
+        if prev is None or len(prev) == 0:
+            fresh = np.arange(n, dtype=np.int32)
+            empty = np.empty(0, dtype=np.int32)
+            self.stats.rows_transferred += n
+            self.stats.bytes_transferred += n * self.row_bytes
+            self._last_plan = ReusePlan(n, self._seq, empty, empty, fresh)
+            return self._last_plan
+        hit, pos_c = member_sorted(prev, keys)
+        reuse_dst = np.nonzero(hit)[0].astype(np.int32)
+        reuse_src = pos_c[hit].astype(np.int32)
+        fresh_dst = np.nonzero(~hit)[0].astype(np.int32)
+        self.stats.rows_reused += len(reuse_dst)
+        self.stats.rows_transferred += len(fresh_dst)
+        self.stats.bytes_saved += len(reuse_dst) * self.row_bytes
+        self.stats.bytes_transferred += len(fresh_dst) * self.row_bytes
+        self._last_plan = ReusePlan(n, self._seq, reuse_src, reuse_dst, fresh_dst)
+        return self._last_plan
+
+    @staticmethod
+    def assemble(prev_table: jax.Array | None, fresh_rows: jax.Array, plan: ReusePlan) -> jax.Array:
+        """Build the [n_working, d] table: device gather of reused rows +
+        scatter of the transferred delta. Pure data movement — bitwise."""
+        if plan.n_reused == 0:
+            return fresh_rows  # fresh_dst is the identity permutation
+        out = jnp.zeros((plan.n_working, fresh_rows.shape[-1]), dtype=fresh_rows.dtype)
+        out = out.at[jnp.asarray(plan.reuse_dst)].set(prev_table[jnp.asarray(plan.reuse_src)])
+        return out.at[jnp.asarray(plan.fresh_dst)].set(fresh_rows)

@@ -13,15 +13,41 @@ Per training batch:
 The SSD row layout packs ``[embedding | optimizer slots]`` in one value so a
 key's full training state moves through MEM-PS/SSD-PS as one fixed-size row
 (the paper's fixed-size-value design).
+
+Lossless pipeline overlap (paper §3-4: the 4-stage pipeline must not change
+the learned model) is implemented with an **in-flight registry**: every
+prepared batch is registered until its push lands on the cluster. When
+``prepare_batch(i+1)`` runs concurrently with the training of batch ``i``,
+its keys are partitioned into
+
+* **fresh** keys — held by no in-flight batch; pulled from the cluster
+  immediately (this is the work that overlaps device compute), and
+* **conflicting** keys — held by a still-in-flight batch; these are NOT
+  pulled (the cluster copy is stale until that batch pushes). Instead the
+  prepare waits, per conflicting predecessor, for its training results and
+  **forwards the pushed rows directly** into the new working set (per-key
+  version forwarding), transferring the MEM-PS pin in the same step.
+
+The push itself is deferred: the train stage only deposits its results
+(:meth:`finish_batch`); the next ``prepare_batch`` call — which the trainer
+runs on the pull/push stage thread — applies all completed pushes in batch
+order before pulling, so SSD/MEM-PS traffic stays off the device stage and
+overlaps the next batch's compute. ``drain()`` applies whatever is left at
+end of stream. The result is bitwise equality with serial execution while
+pull, push and train all overlap.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.keys import member_sorted
 from repro.core.node import Cluster
+from repro.core.pipeline import DependencyRegistry
 
 
 @dataclass
@@ -39,39 +65,326 @@ class WorkingSet:
         return len(self.keys)
 
 
+@dataclass
+class PSStats:
+    """Counters for the conflict-aware pull path."""
+
+    batches_prepared: int = 0
+    rows_pulled: int = 0  # fresh rows actually pulled from the cluster
+    rows_forwarded: int = 0  # conflict rows served by host version forwarding
+    rows_device_served: int = 0  # conflict rows served by the HBM-PS copy
+    pull_bytes_saved: int = 0  # row bytes NOT pulled thanks to both paths
+    dedup_reuses: int = 0  # prepare_batch calls answered by the registry
+    deferred_pushes: int = 0  # pushes applied off the train stage
+
+    @property
+    def conflict_rows(self) -> int:
+        return self.rows_forwarded + self.rows_device_served
+
+
+@dataclass
+class _InFlight:
+    """One prepared batch, tracked until its push lands on the cluster."""
+
+    seq: int
+    ws: WorkingSet
+    requester: int
+    ext_id: int | None  # caller-supplied batch id (speculation dedup)
+    pinned: list = field(default_factory=list)  # key arrays we hold pins on
+    new_params: np.ndarray | None = None  # trained results (finish_batch)
+    new_opt: np.ndarray | None = None
+    trained: bool = False
+
+
 class HierarchicalPS:
     """Host-side orchestrator over a PS cluster."""
 
-    def __init__(self, cluster: Cluster, emb_dim: int, opt_dim: int = 0):
+    def __init__(
+        self,
+        cluster: Cluster,
+        emb_dim: int,
+        opt_dim: int = 0,
+        deps: DependencyRegistry | None = None,
+    ):
         self.cluster = cluster
         self.emb_dim = emb_dim
         self.opt_dim = opt_dim
         assert cluster.dim == emb_dim + opt_dim, (
             f"cluster value dim {cluster.dim} != emb {emb_dim} + opt {opt_dim}"
         )
+        self.deps = deps or DependencyRegistry()
+        self.stats = PSStats()
         self._batch_counter = 0
+        self._lock = threading.RLock()  # registry state
+        self._push_lock = threading.Lock()  # serializes deferred pushes
+        self._inflight: "OrderedDict[int, _InFlight]" = OrderedDict()
+        self._ext_to_seq: dict[int, int] = {}
+        # keys of the last fully-prepared *device-resident* batch (the set
+        # the caller keeps on device when device_resident_prev is passed).
+        # Any unflagged prepare (eval-style), an abort of that batch, or
+        # drain() invalidates it — device-serving against a batch whose
+        # rows never reached the device would train zeros.
+        self._last_prepared_keys: np.ndarray | None = None
+        self._last_prepared_seq: int = -1
 
     # ----------------------------------------------------------- pull side
-    def prepare_batch(self, batch_keys: np.ndarray, requester: int = 0) -> WorkingSet:
+    def prepare_batch(
+        self,
+        batch_keys: np.ndarray,
+        requester: int = 0,
+        batch_id: int | None = None,
+        device_resident_prev: bool = False,
+    ) -> WorkingSet:
         """batch_keys: any-shape uint64 tensor of referenced keys (padded
         entries may use key 0 — slot 0 then maps to key 0's row, which is
-        fine: its update contribution is masked out by the model)."""
+        fine: its update contribution is masked out by the model).
+
+        ``batch_id`` (the caller's external batch identifier) dedups
+        re-execution: a straggler-speculation or retry re-running the
+        pull/push stage for a batch already in flight gets the existing
+        working set back instead of double-pinning every key.
+
+        ``device_resident_prev``: the caller keeps the previous batch's
+        final rows device-resident (DeviceWorkingSet) and will remap shared
+        keys on device. Conflicts held by the *immediately preceding* batch
+        then need no host value at all — the paper's "served from the
+        HBM-PS copy" case — so this prepare does not wait for that batch's
+        training; only conflicts with older in-flight batches still use
+        host version forwarding. The returned working set's rows for those
+        keys are zero and must not be transferred (the device remap covers
+        exactly these keys: they are, by construction, in the previous
+        batch's key set)."""
+        # apply any completed-but-unpushed predecessors first: this runs on
+        # the pull/push stage thread, keeping SSD/MEM-PS write traffic off
+        # the train stage and overlapped with device compute
+        self.apply_ready_pushes()
+
         flat = np.asarray(batch_keys, dtype=np.uint64).reshape(-1)
         uniq, inverse = np.unique(flat, return_inverse=True)
-        rows = self.cluster.pull(uniq, requester=requester, pin=True)
-        # the pulled buffer is freshly allocated per batch, so the working
-        # set can view straight into it — no re-copy of the row data
+        n = len(uniq)
+
+        with self._lock:
+            if batch_id is not None and batch_id in self._ext_to_seq:
+                entry = self._inflight.get(self._ext_to_seq[batch_id])
+                if entry is not None:
+                    self.stats.dedup_reuses += 1
+                    return entry.ws
+            seq = self._batch_counter
+            self._batch_counter += 1
+            # conflict detection: latest in-flight holder per key (scan the
+            # few in-flight batches newest-first; both key sets are sorted)
+            holder_seq = np.full(n, -1, dtype=np.int64)
+            holder_pos = np.zeros(n, dtype=np.int64)
+            entries = {s: e for s, e in self._inflight.items()}
+            for s in sorted(entries, reverse=True):
+                open_mask = holder_seq < 0
+                if not open_mask.any():
+                    break
+                m, pos = member_sorted(entries[s].ws.keys, uniq)
+                m &= open_mask
+                holder_seq[m] = s
+                holder_pos[m] = pos[m]
+            last_keys = self._last_prepared_keys
+
+        # keys of the previous prepared batch are served from the
+        # device-resident HBM-PS copy: no host value, no waiting — the
+        # device remap is inherently ordered after that batch's train step,
+        # and its final device rows are bitwise what its push wrote (so this
+        # holds whether or not that push has landed yet). Push ordering
+        # guarantees no OLDER in-flight batch can still hold such a key.
+        if device_resident_prev and last_keys is not None:
+            device_served, _ = member_sorted(last_keys, uniq)
+        else:
+            device_served = np.zeros(n, dtype=bool)
+        fresh = (holder_seq < 0) & ~device_served
+        n_fresh = int(fresh.sum())
+        if n_fresh == n:
+            # conflict-free (every serial batch after its predecessor's push
+            # landed): the pulled buffer is freshly allocated per batch, so
+            # the working set views straight into it — no re-copy
+            rows = self.cluster.pull(uniq, requester=requester, pin=True)
+        else:
+            rows = np.zeros((n, self.cluster.dim), dtype=np.float32)
+            if n_fresh:
+                # the overlap win: fresh rows pull while predecessors train
+                rows[fresh] = self.cluster.pull(uniq[fresh], requester=requester, pin=True)
         ws = WorkingSet(
             keys=uniq,
             params=rows if self.opt_dim == 0 else rows[:, : self.emb_dim],
             opt_state=rows[:, self.emb_dim :],
             slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
-            batch_id=self._batch_counter,
+            batch_id=seq,
         )
-        self._batch_counter += 1
+        entry = _InFlight(seq=seq, ws=ws, requester=requester, ext_id=batch_id)
+        if n_fresh:
+            entry.pinned.append(uniq[fresh])
+        with self._lock:
+            self._inflight[seq] = entry
+            if batch_id is not None:
+                self._ext_to_seq[batch_id] = seq
+        self.stats.batches_prepared += 1
+        self.stats.rows_pulled += n_fresh
+
+        n_dev = int(device_served.sum())
+        if n_dev:
+            try:
+                # pin transfer happens now, while the predecessor still holds
+                # its own pin (its deferred push releases that one later)
+                dev_keys = uniq[device_served]
+                self.cluster.pin(dev_keys, requester=requester)
+                entry.pinned.append(dev_keys)
+            except BaseException:
+                self._forget(entry, unpin=True)
+                raise
+            self.stats.rows_device_served += n_dev
+            self.stats.pull_bytes_saved += n_dev * self.cluster.dim * 4
+        if n_fresh + n_dev < n:
+            holder_seq = np.where(device_served, -1, holder_seq)
+            try:
+                self._resolve_conflicts(entry, uniq, holder_seq, holder_pos, entries)
+            except BaseException:
+                self._forget(entry, unpin=True)
+                raise
+        with self._lock:
+            if device_resident_prev:
+                self._last_prepared_keys = uniq
+                self._last_prepared_seq = seq
+            else:
+                # a foreign (eval-style) prepare breaks the previous-batch
+                # relationship the device remap relies on
+                self._last_prepared_keys = None
+                self._last_prepared_seq = -1
         return ws
 
+    def _resolve_conflicts(
+        self,
+        entry: _InFlight,
+        uniq: np.ndarray,
+        holder_seq: np.ndarray,
+        holder_pos: np.ndarray,
+        entries: dict[int, _InFlight],
+    ) -> None:
+        """Per-key version forwarding: for each conflicting predecessor (in
+        batch order) wait for its training results, copy its pushed rows for
+        the shared keys straight into this working set, and take over the
+        MEM-PS pin on those keys. No whole-batch blocking: only the batches
+        that actually share keys are awaited, and their non-shared work
+        (fresh pull above, device train below) already overlapped."""
+        ws = entry.ws
+        # worklist of (holder seq, ws row indices), resolved oldest-first; a
+        # holder aborted mid-wait re-queues its keys against the next-older
+        # in-flight holder (which may still carry an unpushed update) and
+        # only keys with no holder at all fall back to a cluster pull
+        work = [
+            (s, np.nonzero(holder_seq == s)[0], holder_pos[holder_seq == s])
+            for s in sorted(set(holder_seq[holder_seq >= 0].tolist()))
+        ]
+        while work:
+            s, idx, pos = work.pop(0)
+            src = entries[s]
+            self.deps.wait(("trained", s))
+            if src.new_params is None:
+                # aborted without training (token signalled by abort/drain):
+                # an older in-flight batch may still hold a pending update
+                sub_keys = uniq[idx]
+                with self._lock:
+                    entries.update(
+                        {s2: e for s2, e in self._inflight.items() if s2 < s}
+                    )
+                h2 = np.full(len(sub_keys), -1, dtype=np.int64)
+                p2 = np.zeros(len(sub_keys), dtype=np.int64)
+                for s2 in sorted((x for x in entries if x < s), reverse=True):
+                    open_m = h2 < 0
+                    if not open_m.any():
+                        break
+                    m2, pp = member_sorted(entries[s2].ws.keys, sub_keys)
+                    m2 &= open_m
+                    h2[m2] = s2
+                    p2[m2] = pp[m2]
+                for s2 in sorted(set(h2[h2 >= 0].tolist())):
+                    sel = h2 == s2
+                    work.append((s2, idx[sel], p2[sel]))
+                work.sort(key=lambda w: w[0])
+                unheld = idx[h2 < 0]
+                if unheld.size:
+                    pulled = self.cluster.pull(
+                        uniq[unheld], requester=entry.requester, pin=True
+                    )
+                    ws.params[unheld] = (
+                        pulled if self.opt_dim == 0 else pulled[:, : self.emb_dim]
+                    )
+                    if self.opt_dim:
+                        ws.opt_state[unheld] = pulled[:, self.emb_dim :]
+                    entry.pinned.append(uniq[unheld])
+                    self.stats.rows_pulled += len(unheld)
+                continue
+            ws.params[idx] = src.new_params[pos]
+            if self.opt_dim:
+                ws.opt_state[idx] = (
+                    src.new_opt[pos] if src.new_opt is not None else src.ws.opt_state[pos]
+                )
+            # pin transfer: we now hold these rows in place of (alongside)
+            # the predecessor, whose deferred push will unpin its own count
+            self.cluster.pin(uniq[idx], requester=entry.requester)
+            entry.pinned.append(uniq[idx])
+            n_fwd = len(idx)
+            self.stats.rows_forwarded += n_fwd
+            self.stats.pull_bytes_saved += n_fwd * self.cluster.dim * 4
+
     # ----------------------------------------------------------- push side
+    def finish_batch(
+        self,
+        ws: WorkingSet,
+        new_params: np.ndarray,
+        new_opt_state: np.ndarray | None = None,
+    ) -> None:
+        """Deposit a batch's trained rows without touching the cluster.
+
+        The actual push is deferred to the pull/push stage thread (the next
+        ``prepare_batch`` / ``apply_ready_pushes`` / ``drain`` call), and the
+        results become the forwarding source for conflicting successors."""
+        with self._lock:
+            entry = self._inflight.get(ws.batch_id)
+            if entry is None:
+                raise KeyError(f"batch {ws.batch_id} is not in flight")
+            entry.new_params = np.asarray(new_params, dtype=np.float32)
+            entry.new_opt = (
+                None if new_opt_state is None else np.asarray(new_opt_state, dtype=np.float32)
+            )
+            entry.trained = True
+        self.deps.signal(("trained", ws.batch_id))
+        # keep the token set bounded: nothing can conflict with (and so wait
+        # on) a batch this far outside the pipeline's in-flight window
+        self.deps.discard(("trained", ws.batch_id - 64))
+
+    def apply_ready_pushes(self) -> int:
+        """Apply the deferred pushes of every trained in-flight batch, oldest
+        first, stopping at the first still-training one (pushes must land in
+        batch order so later batches' rows supersede earlier ones)."""
+        applied = 0
+        with self._push_lock:
+            while True:
+                with self._lock:
+                    entry = next(iter(self._inflight.values()), None)
+                    if entry is None or not entry.trained:
+                        return applied
+                self._push_entry(entry)
+                with self._lock:
+                    self._inflight.pop(entry.seq, None)
+                    if entry.ext_id is not None:
+                        self._ext_to_seq.pop(entry.ext_id, None)
+                applied += 1
+                self.stats.deferred_pushes += 1
+
+    def _push_entry(self, entry: _InFlight) -> None:
+        ws = entry.ws
+        rows = np.empty((ws.n_working, self.cluster.dim), dtype=np.float32)
+        rows[:, : self.emb_dim] = entry.new_params
+        rows[:, self.emb_dim :] = (
+            entry.new_opt if entry.new_opt is not None else ws.opt_state
+        )
+        self.cluster.push(ws.keys, rows, requester=entry.requester, unpin=True)
+
     def complete_batch(
         self,
         ws: WorkingSet,
@@ -79,18 +392,72 @@ class HierarchicalPS:
         new_opt_state: np.ndarray | None = None,
         requester: int = 0,
     ) -> None:
-        rows = np.empty((ws.n_working, self.cluster.dim), dtype=np.float32)
-        rows[:, : self.emb_dim] = new_params
-        rows[:, self.emb_dim :] = (
-            new_opt_state if new_opt_state is not None else ws.opt_state
-        )
-        self.cluster.push(ws.keys, rows, requester=requester, unpin=True)
+        """Synchronous finish+push (serial callers: examples, LM trainer).
+
+        Pushes land in batch order, so the push is immediate only when every
+        earlier in-flight batch already finished (always true for the serial
+        prepare->train->complete loop). The push is attributed to the
+        requester recorded at prepare time; ``requester`` here is kept for
+        signature compatibility."""
+        del requester
+        self.finish_batch(ws, new_params, new_opt_state)
+        self.apply_ready_pushes()
+
+    def drain(self, strict: bool = True) -> None:
+        """End of stream / failure: push every trained batch, unpin the rest.
+
+        ``strict`` (the success path) propagates a push failure — the tail
+        batches' updates landing is part of the run's contract. Pass
+        ``strict=False`` on the failure path, where a push that cannot land
+        (e.g. its owner node died) must not mask the original pipeline
+        error; the remaining batches' pins are still released."""
+        try:
+            self.apply_ready_pushes()
+        except Exception:
+            if strict:
+                raise
+        finally:
+            with self._lock:
+                remaining = list(self._inflight.values())
+                self._inflight.clear()
+                self._ext_to_seq.clear()
+                self._last_prepared_keys = None  # residency ends with the run
+                self._last_prepared_seq = -1
+            for entry in remaining:
+                self.deps.signal(("trained", entry.seq))  # wake any waiter
+                for keys in entry.pinned:
+                    self.cluster.unpin(keys)
 
     def abort_batch(self, ws: WorkingSet) -> None:
         """Unpin without applying (failure path)."""
-        order, bounds = self.cluster._partition(ws.keys)
-        sorted_keys = ws.keys[order]
-        for node_id in range(self.cluster.n_nodes):
-            lo, hi = int(bounds[node_id]), int(bounds[node_id + 1])
-            if lo < hi and self.cluster.nodes[node_id].alive:
-                self.cluster.nodes[node_id].mem.unpin(sorted_keys[lo:hi])
+        with self._lock:
+            entry = self._inflight.pop(ws.batch_id, None)
+            if entry is not None and entry.ext_id is not None:
+                self._ext_to_seq.pop(entry.ext_id, None)
+            if ws.batch_id == self._last_prepared_seq:
+                self._last_prepared_keys = None  # its rows never trained
+                self._last_prepared_seq = -1
+        # wake any prepare blocked on this batch's keys; it will see the
+        # missing results and fall back to pulling the (current) cluster copy
+        self.deps.signal(("trained", ws.batch_id))
+        pinned = entry.pinned if entry is not None else [ws.keys]
+        for keys in pinned:
+            self.cluster.unpin(keys)
+
+    def _forget(self, entry: _InFlight, unpin: bool) -> None:
+        with self._lock:
+            self._inflight.pop(entry.seq, None)
+            if entry.ext_id is not None:
+                self._ext_to_seq.pop(entry.ext_id, None)
+            if entry.seq == self._last_prepared_seq:
+                self._last_prepared_keys = None
+                self._last_prepared_seq = -1
+        self.deps.signal(("trained", entry.seq))
+        if unpin:
+            for keys in entry.pinned:
+                self.cluster.unpin(keys)
+
+    # ------------------------------------------------------------- testing
+    def n_inflight(self) -> int:
+        with self._lock:
+            return len(self._inflight)

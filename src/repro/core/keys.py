@@ -61,6 +61,20 @@ def deterministic_init(keys: np.ndarray, dim: int, scale: float = 0.01, seed: in
     return ((u * 2.0 - 1.0) * scale).astype(np.float32)
 
 
+def member_sorted(ref: np.ndarray, q: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Membership of sorted ``q`` in sorted-unique ``ref``.
+
+    Returns (mask, pos): ``mask[i]`` iff ``q[i]`` is in ``ref``, and
+    ``pos[i]`` is its index there (valid only where ``mask``). One
+    searchsorted pass — the shared primitive behind the in-flight conflict
+    scan (hier_ps) and the device working-set reuse plan (hbm_ps)."""
+    if len(ref) == 0 or len(q) == 0:
+        return np.zeros(len(q), dtype=bool), np.zeros(len(q), dtype=np.int64)
+    pos = np.searchsorted(ref, q)
+    pos_c = np.minimum(pos, len(ref) - 1)
+    return ref[pos_c] == q, pos_c
+
+
 def partition_by_owner(keys: np.ndarray, owners: np.ndarray, n_owners: int):
     """Group ``keys`` by owner id.
 

@@ -342,6 +342,22 @@ class MemParameterServer:
                 self.index.insert(a_keys, new_rows)
             self._shrink_lru()
 
+    def pin(self, keys: np.ndarray) -> None:
+        """Add a pin to already-cached rows (per-key occurrence counts).
+
+        Used by the pipeline's version forwarding: a successor batch takes
+        over a predecessor's rows without re-pulling them, so it must take
+        over the eviction pin too. Keys not currently cached are ignored —
+        their value safety is guaranteed by the dirty-row staging buffer."""
+        keys = np.asarray(keys, dtype=np.uint64).reshape(-1)
+        if keys.size == 0:
+            return
+        with self._lock:
+            uniq, counts = np.unique(keys, return_counts=True)
+            rows = self.index.lookup(uniq)
+            hit = rows >= 0
+            self.pins[rows[hit]] += counts[hit]
+
     def unpin(self, keys: np.ndarray) -> None:
         keys = np.asarray(keys, dtype=np.uint64).reshape(-1)
         if keys.size == 0:
@@ -352,6 +368,12 @@ class MemParameterServer:
             hit = rows >= 0
             hrows = rows[hit]
             self.pins[hrows] = np.maximum(self.pins[hrows] - counts[hit], 0)
+
+    @property
+    def total_pins(self) -> int:
+        """Sum of live pin counts (pin-leak regression checks)."""
+        with self._lock:
+            return int(self.pins[self.tier != _FREE].sum())
 
     def flush_all(self) -> None:
         """Write every dirty row to the SSD-PS (checkpoint/shutdown path)."""

@@ -88,6 +88,11 @@ class PSNode:
             raise NodeDownError(f"node {self.node_id} is down")
         self.mem.push(keys, values, unpin=unpin)
 
+    def pin(self, keys: np.ndarray) -> None:
+        if not self.alive:
+            raise NodeDownError(f"node {self.node_id} is down")
+        self.mem.pin(keys)
+
     def kill(self) -> None:
         """Simulate a node failure: in-memory state is lost."""
         self.alive = False
@@ -116,6 +121,13 @@ class Cluster:
         self.n_nodes = n_nodes
         self.base_dir = base_dir
         self.dim = dim
+        # remember construction parameters so restore() can rebuild an
+        # identically-configured cluster (resume must not silently revert
+        # cache/file capacities or the network model to defaults)
+        self.cache_capacity = cache_capacity
+        self.file_capacity = file_capacity
+        self.init_scale = init_scale
+        self.init_cols = init_cols
         self.network = network or NetworkModel()
         self.nodes = [
             PSNode(i, base_dir, dim, cache_capacity, file_capacity, init_scale, init_cols)
@@ -138,7 +150,12 @@ class Cluster:
 
     def pull(self, keys: np.ndarray, requester: int = 0, pin: bool = True) -> np.ndarray:
         """Partitioned pull: local shard from local MEM-PS/SSD-PS, remote
-        shards from peer MEM-PS over the (simulated) network."""
+        shards from peer MEM-PS over the (simulated) network.
+
+        Pin-transactional: if a node fails partway (NodeDownError, MEM-PS
+        pin pressure), pins taken by the already-served segments — including
+        rows a failing MEM-PS allocated before raising — are rolled back, so
+        a retried or abandoned pull never strands pinned rows."""
         keys = np.asarray(keys, dtype=np.uint64)
         order, bounds = self._partition(keys)
         sorted_keys = keys[order]
@@ -148,7 +165,15 @@ class Cluster:
             if lo == hi:
                 continue
             t0 = time.perf_counter()
-            vals = self.nodes[node_id].pull(sorted_keys[lo:hi], pin=pin)
+            try:
+                vals = self.nodes[node_id].pull(sorted_keys[lo:hi], pin=pin)
+            except BaseException:
+                if pin:  # roll back this + every prior segment's pins
+                    for nid in range(node_id + 1):
+                        l, h = int(bounds[nid]), int(bounds[nid + 1])
+                        if l < h and self.nodes[nid].alive:
+                            self.nodes[nid].mem.unpin(sorted_keys[l:h])
+                raise
             elapsed = time.perf_counter() - t0
             if node_id == requester:
                 self.pull_local_time += elapsed
@@ -175,6 +200,54 @@ class Cluster:
             if node_id != requester:
                 self.network.transfer((hi - lo) * (8 + 4 * self.dim))
             self.nodes[node_id].push(sorted_keys[lo:hi], sorted_vals[lo:hi], unpin=unpin)
+
+    def pin(self, keys: np.ndarray, requester: int = 0) -> None:
+        """Partitioned pin (version-forwarding pin transfer): a successor
+        batch takes over eviction pins on rows it received without a pull.
+        Remote pins cost one key-sized control message, far below the row
+        pull they replace. Pin-transactional like ``pull``: a node failure
+        mid-way rolls back the segments already pinned."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        order, bounds = self._partition(keys)
+        sorted_keys = keys[order]
+        for node_id in range(self.n_nodes):
+            lo, hi = int(bounds[node_id]), int(bounds[node_id + 1])
+            if lo == hi:
+                continue
+            try:
+                self.nodes[node_id].pin(sorted_keys[lo:hi])
+            except BaseException:
+                for nid in range(node_id):
+                    l, h = int(bounds[nid]), int(bounds[nid + 1])
+                    if l < h and self.nodes[nid].alive:
+                        self.nodes[nid].mem.unpin(sorted_keys[l:h])
+                raise
+            if node_id != requester:
+                self.network.transfer((hi - lo) * 8)
+
+    def unpin(self, keys: np.ndarray) -> None:
+        """Partitioned unpin without a push (abort/drain path)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        order, bounds = self._partition(keys)
+        sorted_keys = keys[order]
+        for node_id in range(self.n_nodes):
+            lo, hi = int(bounds[node_id]), int(bounds[node_id + 1])
+            if lo < hi and self.nodes[node_id].alive:
+                self.nodes[node_id].mem.unpin(sorted_keys[lo:hi])
+
+    def total_pins(self) -> int:
+        """Live pin count across nodes (pin-leak regression checks)."""
+        return sum(n.mem.total_pins for n in self.nodes if n.alive)
+
+    def ctor_kwargs(self) -> dict:
+        """The non-positional construction parameters, for restore()."""
+        return {
+            "cache_capacity": self.cache_capacity,
+            "file_capacity": self.file_capacity,
+            "network": self.network,
+            "init_scale": self.init_scale,
+            "init_cols": self.init_cols,
+        }
 
     # ------------------------------------------------------------ lifecycle
     def flush_all(self) -> None:

@@ -14,11 +14,19 @@ Extras for 1000+-node operation:
 
 * per-stage timing stats (drives the Fig-3c reproduction);
 * straggler mitigation: a job whose stage exceeds ``timeout`` is
-  speculatively re-executed on a backup worker; first completion wins
-  (stages must be idempotent — pull/transfer are; train consumes its input
-  exactly once at the sink via job-id dedup);
+  speculatively re-executed on a backup worker; first completion wins.
+  Speculation is only legal for stages marked ``idempotent`` — re-running a
+  stage with side effects (e.g. the pull/push stage, which pins MEM-PS rows)
+  would double-apply them, so non-idempotent stages never get a backup;
 * failure handling: a stage exception is retried ``max_retries`` times,
-  then the pipeline drains and surfaces the error.
+  then the pipeline drains and surfaces the error;
+* inter-stage dependencies: a :class:`DependencyRegistry` lets one stage
+  publish completion tokens (e.g. "batch i trained") that another stage
+  awaits (e.g. "pull of batch i+1 forwards batch i's pushed rows") — the
+  mechanism behind the lossless overlap of pull(i+1) with train(i);
+* clean shutdown: every queue put/get is stop-aware, so abandoning the
+  ``run`` iterator early (or a downstream error) cannot leave a worker
+  blocked forever on a full queue with its batch's rows still pinned.
 """
 
 from __future__ import annotations
@@ -27,10 +35,73 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Iterator
+from typing import Any, Callable, Hashable, Iterable, Iterator
 
 
 _SENTINEL = object()
+_STOPPED = object()  # returned by stop-aware get when the pipeline is halting
+_POLL_S = 0.05  # granularity at which blocked puts/gets observe _stop
+
+
+class DependencyAborted(RuntimeError):
+    """Raised to a waiter when the pipeline shuts down before its token."""
+
+
+class DependencyRegistry:
+    """Completion tokens signalled by one stage and awaited by another.
+
+    Tokens are arbitrary hashable values (e.g. ``("trained", batch_id)``).
+    ``wait`` blocks until the token is signalled; ``abort`` wakes every
+    waiter with :class:`DependencyAborted` so a dying pipeline never leaves
+    a stage blocked on an event that will no longer happen.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._done: set[Hashable] = set()
+        self._aborted = False
+
+    def signal(self, token: Hashable) -> None:
+        with self._cond:
+            self._done.add(token)
+            self._cond.notify_all()
+
+    def discard(self, token: Hashable) -> None:
+        """Drop a token no waiter can reference anymore (keeps the done-set
+        bounded over long runs); waiting on a discarded token hangs."""
+        with self._cond:
+            self._done.discard(token)
+
+    def is_done(self, token: Hashable) -> bool:
+        with self._cond:
+            return token in self._done
+
+    def wait(self, token: Hashable, timeout: float | None = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while token not in self._done:
+                if self._aborted:
+                    raise DependencyAborted(f"pipeline stopped before {token!r}")
+                remaining = _POLL_S if deadline is None else min(
+                    _POLL_S, deadline - time.monotonic()
+                )
+                if remaining <= 0:
+                    raise TimeoutError(f"dependency {token!r} not signalled")
+                self._cond.wait(remaining)
+
+    def abort(self) -> None:
+        with self._cond:
+            self._aborted = True
+            self._cond.notify_all()
+
+    def reset(self) -> None:
+        """Clear a previous abort AND all signalled tokens (a fresh pipeline
+        run reuses the registry; stale tokens would satisfy a new run's
+        waits instantly). Call only with no waiter in flight — Pipeline.run
+        does so before starting its workers."""
+        with self._cond:
+            self._aborted = False
+            self._done.clear()
 
 
 @dataclass
@@ -55,6 +126,7 @@ class Stage:
     capacity: int = 2  # prefetch-queue depth feeding the NEXT stage
     timeout: float | None = None  # straggler threshold (seconds)
     max_retries: int = 2
+    idempotent: bool = True  # False => never speculatively re-executed
 
 
 class PipelineError(RuntimeError):
@@ -64,69 +136,123 @@ class PipelineError(RuntimeError):
 class Pipeline:
     """Chain of stages, each on its own worker thread."""
 
-    def __init__(self, stages: list[Stage]):
+    def __init__(self, stages: list[Stage], deps: DependencyRegistry | None = None):
         self.stages = stages
         self.stats = [StageStats(s.name) for s in stages]
+        self.deps = deps
         self._error: Exception | None = None
         self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    # --------------------------------------------------- stop-aware queue ops
+    def _put(self, q: queue.Queue, item: Any) -> bool:
+        """Blocking put that observes ``_stop``; returns False if halted."""
+        while not self._stop.is_set():
+            try:
+                q.put(item, timeout=_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _get(self, q: queue.Queue) -> Any:
+        """Blocking get that observes ``_stop``; returns _STOPPED if halted."""
+        while not self._stop.is_set():
+            try:
+                return q.get(timeout=_POLL_S)
+            except queue.Empty:
+                continue
+        return _STOPPED
+
+    @staticmethod
+    def _drain(q: queue.Queue) -> None:
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                return
 
     # ------------------------------------------------------------- running
     def run(self, source: Iterable[Any]) -> Iterator[Any]:
         """Stream ``source`` items through all stages, yielding results in
         order. Timing of each stage is recorded in ``self.stats``."""
+        if self.deps is not None:
+            self.deps.reset()
+        self._stop.clear()
+        self._error = None
         queues = [queue.Queue(maxsize=max(1, s.capacity)) for s in self.stages]
         out_q: queue.Queue = queue.Queue(maxsize=max(1, self.stages[-1].capacity))
-        threads = []
+        all_queues = queues + [out_q]
 
         def feeder():
             try:
                 for item in source:
-                    if self._stop.is_set():
+                    if not self._put(queues[0], item):
                         return
-                    queues[0].put(item)
             except Exception as e:  # propagate source errors
                 self._error = e
+                self._stop.set()
             finally:
-                queues[0].put(_SENTINEL)
+                self._put(queues[0], _SENTINEL)
 
         def worker(idx: int):
             stage, stats = self.stages[idx], self.stats[idx]
             in_q = queues[idx]
             nxt = queues[idx + 1] if idx + 1 < len(self.stages) else out_q
-            while not self._stop.is_set():
+            while True:
                 t0 = time.perf_counter()
-                item = in_q.get()
+                item = self._get(in_q)
                 stats.wait_time += time.perf_counter() - t0
+                if item is _STOPPED:
+                    return
                 if item is _SENTINEL:
-                    nxt.put(_SENTINEL)
+                    self._put(nxt, _SENTINEL)
                     return
                 try:
                     result = self._run_job(stage, stats, item)
                 except Exception as e:
-                    self._error = e
-                    self._stop.set()
-                    nxt.put(_SENTINEL)
+                    if self._error is None:  # keep the root cause: secondary
+                        self._error = e  # failures (DependencyAborted in a
+                    self._stop.set()  # stage the abort released) don't mask it
+                    if self.deps is not None:
+                        self.deps.abort()
                     return
                 t0 = time.perf_counter()
-                nxt.put(result)
+                if not self._put(nxt, result):
+                    return
                 stats.stall_time += time.perf_counter() - t0
 
-        threads.append(threading.Thread(target=feeder, daemon=True))
+        self._threads = [threading.Thread(target=feeder, daemon=True)]
         for i in range(len(self.stages)):
-            threads.append(threading.Thread(target=worker, args=(i,), daemon=True))
-        for t in threads:
+            self._threads.append(threading.Thread(target=worker, args=(i,), daemon=True))
+        for t in self._threads:
             t.start()
 
         # speculative duplicates never reach the sink: the stage returns the
         # first completion and drops the loser, so results stay exactly-once.
-        while True:
-            item = out_q.get()
-            if item is _SENTINEL:
-                break
-            yield item
-        self._stop.set()
+        try:
+            while True:
+                item = self._get(out_q)
+                if item is _STOPPED or item is _SENTINEL:
+                    break
+                yield item
+        finally:
+            self._shutdown(all_queues)
         if self._error is not None:
             raise PipelineError(f"pipeline failed: {self._error!r}") from self._error
+
+    def _shutdown(self, all_queues: list[queue.Queue]) -> None:
+        """Halt workers and release every blocked thread: stop flag first
+        (puts/gets poll it), then abort dependency waiters, then drain the
+        queues so no batch stays enqueued with its rows pinned."""
+        self._stop.set()
+        if self.deps is not None:
+            self.deps.abort()
+        deadline = time.monotonic() + 5.0
+        for t in self._threads:
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+        for q in all_queues:
+            self._drain(q)
 
     # ------------------------------------------------- one job, one stage
     def _run_job(self, stage: Stage, stats: StageStats, item: Any) -> Any:
@@ -134,13 +260,15 @@ class Pipeline:
         while True:
             t0 = time.perf_counter()
             try:
-                if stage.timeout is None:
+                if stage.timeout is None or not stage.idempotent:
                     result = stage.fn(item)
                 else:
                     result = self._run_speculative(stage, stats, item)
                 stats.jobs += 1
                 stats.busy_time += time.perf_counter() - t0
                 return result
+            except DependencyAborted:
+                raise  # the pipeline is dying; re-running cannot succeed
             except Exception:
                 attempts += 1
                 stats.retries += 1
@@ -149,7 +277,8 @@ class Pipeline:
 
     def _run_speculative(self, stage: Stage, stats: StageStats, item: Any) -> Any:
         """Run fn; if it exceeds the straggler timeout, launch a backup and
-        take whichever finishes first."""
+        take whichever finishes first. Only called for idempotent stages —
+        the backup may re-execute a job whose primary later also completes."""
         result_q: queue.Queue = queue.Queue()
 
         def attempt(tag: str):

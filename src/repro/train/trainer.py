@@ -3,12 +3,21 @@
 Wires together every subsystem the paper describes:
 
   stage 1 (read)      — synthetic HDFS stream -> CTRBatch
-  stage 2 (pull/push) — HierarchicalPS.prepare_batch (MEM-PS + SSD-PS +
-                        remote pulls); the *push* of the previous batch also
-                        happens here, keeping SSD traffic on this stage's
-                        thread exactly like the paper
-  stage 3 (transfer)  — device_put of minibatch tensors + working table
-  stage 4 (train)     — one jit: k mini-batches + row-Adagrad + tower Adam
+  stage 2 (pull/push) — HierarchicalPS.prepare_batch: applies the deferred
+                        push of completed batches, pulls the new batch's
+                        fresh keys (MEM-PS + SSD-PS + remote pulls), and
+                        resolves cross-batch conflicts by per-key version
+                        forwarding — all SSD/MEM-PS traffic stays on this
+                        stage's thread, overlapped with device compute
+  stage 3 (transfer)  — device_put of minibatch tensors + only the *delta*
+                        working rows; rows shared with the previous batch
+                        stay device-resident (DeviceWorkingSet remap)
+  stage 4 (train)     — one jit: k mini-batches + row-Adagrad + tower Adam;
+                        results are deposited for the pull/push stage to
+                        push, keeping this stage pure device compute
+
+The overlap is lossless: pipelined and serial execution produce bitwise-
+identical loss trajectories and parameter state (tests/test_system.py).
 
 Fault tolerance: periodic async checkpoints persist tower/opt state and the
 PS cluster manifest; ``resume`` restores and continues deterministically.
@@ -25,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.ctr_models import CTRConfig
+from repro.core.hbm_ps import DeviceWorkingSet
 from repro.core.hier_ps import HierarchicalPS, WorkingSet
 from repro.core.node import Cluster
 from repro.core.pipeline import Pipeline, Stage
@@ -42,29 +52,48 @@ class TrainerConfig:
     checkpoint_every: int = 0  # batches; 0 = off
     checkpoint_dir: str = ""
     queue_capacity: int = 2
-    stage_timeout: float | None = None  # straggler threshold
+    # straggler threshold for the read stage (the paper's HDFS-read
+    # stragglers); the stateful stages (pull/push pins rows, transfer
+    # advances the reuse plan, train owns the model) are never speculated
+    stage_timeout: float | None = None
+    device_reuse: bool = True  # cross-batch device working-set residency
 
 
 class CTRTrainer:
-    def __init__(self, cfg: CTRConfig, cluster: Cluster, tcfg: TrainerConfig = TrainerConfig(), seed: int = 0):
+    def __init__(self, cfg: CTRConfig, cluster: Cluster, tcfg: TrainerConfig | None = None, seed: int = 0):
         self.cfg = cfg
         self.cluster = cluster
-        self.tcfg = tcfg
+        # each trainer gets its own config object — a shared mutable default
+        # instance would leak one caller's mutations into every other trainer
+        self.tcfg = tcfg if tcfg is not None else TrainerConfig()
+        tcfg = self.tcfg
         # SSD row = [emb | adagrad accum] -> opt_dim == emb_dim
         self.ps = HierarchicalPS(cluster, cfg.emb_dim, cfg.emb_dim)
+        self.dev_ws = DeviceWorkingSet(row_bytes=2 * cfg.emb_dim * 4)
         self.tower = ctr_model.init_tower(cfg, jax.random.PRNGKey(seed))
         self.opt = AdamW(lr=tcfg.tower_lr)
         self.opt_state = self.opt.init(self.tower)
         self.step_fn = jax.jit(make_ctr_train_step(cfg, tcfg.row_lr, self.opt))
         self.batches_done = 0
         self.losses: list[float] = []
+        self._prev_table = None  # previous batch's final device rows
+        self._prev_accum = None
+        self._train_seq = 0  # device-table generation (guards reuse plans)
         self.ckpt = (
             ckpt.AsyncCheckpointer(tcfg.checkpoint_dir) if tcfg.checkpoint_every else None
         )
 
     # ------------------------------------------------------------ stages
     def _stage_pull(self, batch: CTRBatch):
-        ws = self.ps.prepare_batch(batch.keys)
+        # prepare_batch also applies completed predecessors' deferred pushes
+        # on this thread, then pulls fresh keys / forwards conflicting ones;
+        # batch_id dedups straggler re-execution (no double pinning). With
+        # device reuse on, keys shared with the immediately-preceding batch
+        # are served from the device-resident copy (no host value, no wait)
+        ws = self.ps.prepare_batch(
+            batch.keys, batch_id=batch.batch_id,
+            device_resident_prev=self.tcfg.device_reuse,
+        )
         return batch, ws
 
     def _stage_transfer(self, item):
@@ -79,19 +108,50 @@ class CTRTrainer:
             "valid": sl(batch.valid),
             "labels": sl(batch.labels),
         }
-        return batch, ws, minibatches, jnp.asarray(ws.params), jnp.asarray(ws.opt_state)
+        if self.tcfg.device_reuse:
+            # only the delta crosses the host->device link; rows shared with
+            # the previous batch are remapped on device at train time
+            plan = self.dev_ws.plan(ws.keys, batch_id=batch.batch_id)
+            params = jnp.asarray(ws.params[plan.fresh_dst])
+            accum = jnp.asarray(ws.opt_state[plan.fresh_dst])
+        else:
+            plan = None
+            params = jnp.asarray(ws.params)
+            accum = jnp.asarray(ws.opt_state)
+        return batch, ws, minibatches, plan, params, accum
 
     def _stage_train(self, item):
-        batch, ws, minibatches, table, accum = item
+        batch, ws, minibatches, plan, params, accum = item
+        if plan is None:
+            table, row_accum = params, accum
+        else:
+            # a plan that reuses rows must remap from the table produced by
+            # the generation right before it (full-transfer plans resync
+            # after a reset/aborted run, where no residency is assumed)
+            if plan.n_reused and plan.seq != self._train_seq + 1:
+                raise RuntimeError(
+                    f"device working-set plan {plan.seq} does not match table "
+                    f"generation {self._train_seq} (pipeline stage skipped?)"
+                )
+            table = DeviceWorkingSet.assemble(self._prev_table, params, plan)
+            row_accum = DeviceWorkingSet.assemble(self._prev_accum, accum, plan)
         self.tower, self.opt_state, new_table, new_accum, metrics = self.step_fn(
-            self.tower, self.opt_state, table, accum, minibatches
+            self.tower, self.opt_state, table, row_accum, minibatches
         )
-        # push updated rows (+ optimizer slots) back through MEM-PS -> SSD-PS
-        self.ps.complete_batch(ws, np.asarray(new_table), np.asarray(new_accum))
+        self._prev_table, self._prev_accum = new_table, new_accum
+        if plan is not None:
+            self._train_seq = plan.seq
+        # deposit updated rows (+ optimizer slots); the pull/push stage
+        # thread pushes them through MEM-PS -> SSD-PS and forwards them to
+        # any successor batch waiting on these keys
+        self.ps.finish_batch(ws, np.asarray(new_table), np.asarray(new_accum))
         loss = float(metrics["loss"])
         self.losses.append(loss)
         self.batches_done += 1
         if self.ckpt and self.batches_done % self.tcfg.checkpoint_every == 0:
+            # flush deferred pushes so the manifest captures a consistent
+            # cut: all batches up to and including this one
+            self.ps.apply_ready_pushes()
             self.ckpt.save(
                 self.batches_done,
                 {"tower": self.tower, "opt": self.opt_state},
@@ -105,23 +165,47 @@ class CTRTrainer:
         t = self.tcfg
         return Pipeline(
             [
-                Stage("read", lambda b: b, capacity=t.queue_capacity),
-                Stage("pull_push", self._stage_pull, capacity=t.queue_capacity, timeout=t.stage_timeout),
-                Stage("transfer", self._stage_transfer, capacity=t.queue_capacity),
-                Stage("train", self._stage_train, capacity=t.queue_capacity),
-            ]
+                # only the read stage is side-effect free, so it alone gets
+                # straggler speculation (the paper's HDFS-read stragglers)
+                Stage("read", lambda b: b, capacity=t.queue_capacity,
+                      timeout=t.stage_timeout),
+                # pull/push pins MEM-PS rows and registers in-flight batches,
+                # transfer advances the device-reuse plan, train owns the
+                # model state: NOT idempotent, never speculated
+                Stage("pull_push", self._stage_pull, capacity=t.queue_capacity,
+                      idempotent=False),
+                Stage("transfer", self._stage_transfer, capacity=t.queue_capacity,
+                      idempotent=False),
+                # train mutates tower/opt state before it can fail, so a
+                # retry would apply the batch's gradient step twice
+                Stage("train", self._stage_train, capacity=t.queue_capacity,
+                      idempotent=False, max_retries=0),
+            ],
+            deps=self.ps.deps,
         )
 
     def run(self, stream, n_batches: int, pipelined: bool = True):
         src = (next(it) for it in [iter(stream)] for _ in range(n_batches))
-        if pipelined:
-            pipe = self.build_pipeline()
-            results = list(pipe.run(src))
-            self.last_pipeline = pipe
-        else:  # serial baseline (the "no pipeline" ablation)
-            results = []
-            for b in src:
-                results.append(self._stage_train(self._stage_transfer(self._stage_pull(b))))
+        try:
+            if pipelined:
+                pipe = self.build_pipeline()
+                results = list(pipe.run(src))
+                self.last_pipeline = pipe
+            else:  # serial baseline (the "no pipeline" ablation)
+                results = []
+                for b in src:
+                    results.append(self._stage_train(self._stage_transfer(self._stage_pull(b))))
+        except BaseException:
+            # failure path: release pins without masking the primary error
+            self.ps.drain(strict=False)
+            self.dev_ws.reset()
+            raise
+        # success path: the tail batches' deferred pushes MUST land (a
+        # failure here is a real error) — then drop cross-run device
+        # residency: a later run may follow a resume(), where the cached
+        # rows no longer match the cluster state
+        self.ps.drain()
+        self.dev_ws.reset()
         if self.ckpt:
             self.ckpt.wait()
         return results
@@ -135,6 +219,12 @@ class CTRTrainer:
         self.tower, self.opt_state = tree["tower"], tree["opt"]
         self.batches_done = step
         if ps_manifest is not None:
-            self.cluster = Cluster.restore(ps_manifest, self.cluster.base_dir)
+            # rebuild with the original capacities/network model — restoring
+            # with defaults would silently change cache behaviour
+            self.cluster = Cluster.restore(
+                ps_manifest, self.cluster.base_dir, **self.cluster.ctor_kwargs()
+            )
             self.ps = HierarchicalPS(self.cluster, self.cfg.emb_dim, self.cfg.emb_dim)
+        self.dev_ws.reset()
+        self._prev_table = self._prev_accum = None
         return step

@@ -71,6 +71,30 @@ def test_trainer_crash_restart_continues(tmp_path):
     assert len(more) == 4
 
 
+def test_resume_preserves_cluster_config(tmp_path):
+    """Cluster.restore used to be called with defaults, silently reverting a
+    resumed cluster to cache_capacity=100_000 / file_capacity=4096 and a
+    fresh NetworkModel; resume must rebuild with the original kwargs."""
+    from repro.core.node import NetworkModel
+
+    net = NetworkModel(latency_s=1e-3, bandwidth_gbps=7.0)
+    cl = Cluster(2, str(tmp_path / "ps"), dim=TINY.emb_dim * 2,
+                 cache_capacity=777, file_capacity=64, network=net,
+                 init_cols=TINY.emb_dim)
+    cfg = TrainerConfig(checkpoint_every=2, checkpoint_dir=str(tmp_path / "ck"))
+    tr = CTRTrainer(TINY, cl, cfg)
+    stream = SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example,
+                                TINY.n_slots, TINY.batch_size, seed=3)
+    tr.run(stream, 2)
+    tr.resume()
+    assert tr.cluster is not cl  # a restored cluster, not the original
+    assert tr.cluster.cache_capacity == 777
+    assert tr.cluster.file_capacity == 64
+    assert tr.cluster.network is net  # stats keep accumulating
+    assert all(n.mem.capacity == 777 for n in tr.cluster.nodes)
+    assert all(n.ssd.file_capacity == 64 for n in tr.cluster.nodes)
+
+
 def test_ps_node_failure_recovery(tmp_path):
     """A dead node loses DRAM; restart + manifest restore recovers rows."""
     cl = Cluster(3, str(tmp_path / "ps"), dim=4, cache_capacity=256, file_capacity=32)

@@ -12,9 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hbm_ps import (
+    DeviceWorkingSet,
     ShardedWorkingTable,
     WorkingTable,
     from_sharded_rows,
+    plan_a2a,
     to_sharded_rows,
 )
 
@@ -54,3 +56,64 @@ def test_sharded_get_and_accumulate():
     exp = vals.copy()
     np.add.at(exp, np.asarray(slots), np.asarray(grads))
     np.testing.assert_allclose(back, exp, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+def test_sharded_get_a2a_matches_psum():
+    """The two-all_to_all p2p exchange returns the same rows as the psum
+    exchange (bitwise — both are pure data movement)."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    swt = ShardedWorkingTable(mesh, "model")
+    n, d, S = 53, 16, 4
+    vals = np.random.default_rng(1).random((n, d)).astype(np.float32)
+    table = jax.device_put(jnp.asarray(to_sharded_rows(vals, S)), swt.sharding())
+    slots = np.random.default_rng(4).integers(0, n, 24)
+    req, restore = plan_a2a(slots, S)
+    got = swt.get_a2a(table, jnp.asarray(req), jnp.asarray(restore))
+    np.testing.assert_array_equal(np.asarray(got), vals[slots])
+    psum = swt.get_psum(table, jnp.asarray(slots.astype(np.int32)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(psum))
+
+
+def test_plan_a2a_pads_per_owner_lists_equally():
+    S = 4
+    slots = np.array([0, 4, 8, 12, 1, 2, 3, 7], dtype=np.int64)  # skewed owners
+    req, restore = plan_a2a(slots, S)
+    assert req.shape == (S, S, 2)  # requester 0 asks owner 0 for two slots
+    np.testing.assert_array_equal(req[0, 0], [0, 4])
+    np.testing.assert_array_equal(req[1, 0], [8, 12])
+    # unused (requester, owner) lists are pure padding: the owner's own slot
+    # id, which resolves to its local row 0 — always a valid gather
+    np.testing.assert_array_equal(req[0, 1], [1, 1])
+    assert (req % S == np.arange(S)[None, :, None]).all()  # owner-routed
+    assert (restore < S * 2).all()
+    # restore maps each batch position to its row in the received block
+    flat_rows = req.reshape(S, -1)  # pretend each owner returned its slots
+    for r in range(S):
+        np.testing.assert_array_equal(flat_rows[r][restore[r]], slots.reshape(S, 2)[r])
+
+
+def test_device_working_set_reuse_plan_and_assemble():
+    dws = DeviceWorkingSet(row_bytes=8)
+    k1 = np.array([3, 5, 9], dtype=np.uint64)
+    p1 = dws.plan(k1)
+    assert p1.n_reused == 0 and list(p1.fresh_dst) == [0, 1, 2]
+    t1 = jnp.asarray(np.array([[3.0], [5.0], [9.0]], np.float32))
+    assert DeviceWorkingSet.assemble(None, t1, p1) is t1  # identity transfer
+
+    # next batch shares keys 5 and 9; only key 7's row crosses the link
+    k2 = np.array([5, 7, 9], dtype=np.uint64)
+    p2 = dws.plan(k2)
+    assert p2.n_reused == 2
+    np.testing.assert_array_equal(p2.reuse_src, [1, 2])  # rows of 5, 9 in t1
+    np.testing.assert_array_equal(p2.reuse_dst, [0, 2])
+    np.testing.assert_array_equal(p2.fresh_dst, [1])
+    fresh = jnp.asarray(np.array([[7.0]], np.float32))
+    t2 = DeviceWorkingSet.assemble(t1, fresh, p2)
+    np.testing.assert_array_equal(np.asarray(t2), [[5.0], [7.0], [9.0]])
+    assert dws.stats.rows_reused == 2 and dws.stats.bytes_saved == 16
+
+    # reset invalidates residency (resume / aborted pipeline)
+    dws.reset()
+    p3 = dws.plan(k2)
+    assert p3.n_reused == 0

@@ -1,0 +1,240 @@
+"""HierarchicalPS in-flight registry: conflict-aware pulls, version
+forwarding, deferred pushes, pin accounting, speculation dedup."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.hier_ps import HierarchicalPS
+from repro.core.node import Cluster
+from repro.configs.ctr_models import TINY
+from repro.data.synthetic_ctr import SyntheticCTRStream
+from repro.train.trainer import CTRTrainer, TrainerConfig
+
+EMB, OPT = 4, 4
+
+
+@pytest.fixture
+def ps(tmp_path):
+    cl = Cluster(2, str(tmp_path / "ps"), dim=EMB + OPT, cache_capacity=512,
+                 file_capacity=32, init_cols=EMB)
+    return HierarchicalPS(cl, EMB, OPT)
+
+
+def keys(*ids):
+    return np.array(ids, dtype=np.uint64)
+
+
+def test_prepare_dedup_by_batch_id_no_double_pin(ps):
+    """Pin-leak regression: a straggling pull/push stage re-running
+    prepare_batch for the same batch must get the existing working set back
+    instead of pinning every key a second time (the leak only cleared at
+    MemoryError before)."""
+    ws1 = ps.prepare_batch(keys(1, 2, 3, 4), batch_id=7)
+    assert ps.cluster.total_pins() == 4
+    ws2 = ps.prepare_batch(keys(1, 2, 3, 4), batch_id=7)  # speculative rerun
+    assert ws2 is ws1
+    assert ps.stats.dedup_reuses == 1
+    assert ps.cluster.total_pins() == 4, "re-execution double-pinned"
+    ps.complete_batch(ws1, np.ones((4, EMB), np.float32), np.ones((4, OPT), np.float32))
+    assert ps.cluster.total_pins() == 0
+    assert ps.n_inflight() == 0
+
+
+def test_conflict_keys_forward_from_completing_batch(ps):
+    """prepare(i+1) must not re-pull keys held by in-flight batch i: it
+    blocks (per key segment, not whole-batch) until i's results arrive and
+    forwards the pushed rows — the cluster copy is stale until i pushes."""
+    ws1 = ps.prepare_batch(keys(10, 11, 12), batch_id=0)
+    pulled_before = ps.stats.rows_pulled
+    out = {}
+
+    def prepare_next():
+        out["ws"] = ps.prepare_batch(keys(11, 12, 13), batch_id=1)
+
+    t = threading.Thread(target=prepare_next)
+    t.start()
+    time.sleep(0.15)
+    assert t.is_alive(), "prepare(i+1) should await batch i's results"
+    new_p = np.full((3, EMB), 5.0, np.float32)
+    new_o = np.full((3, OPT), 6.0, np.float32)
+    ps.finish_batch(ws1, new_p, new_o)
+    t.join(5.0)
+    assert not t.is_alive()
+    ws2 = out["ws"]
+    # shared keys carry batch 0's pushed values, fresh key came from the PS
+    i11, i12 = np.searchsorted(ws2.keys, [11, 12])
+    np.testing.assert_array_equal(ws2.params[[i11, i12]], new_p[[1, 2]])
+    np.testing.assert_array_equal(ws2.opt_state[[i11, i12]], new_o[[1, 2]])
+    assert ps.stats.rows_forwarded == 2
+    assert ps.stats.rows_pulled == pulled_before + 1  # only key 13 pulled
+    assert ps.stats.pull_bytes_saved == 2 * (EMB + OPT) * 4
+    # pin transfer: ws2 now holds pins on all 3 of its keys (batch 0's
+    # deferred push released its own); complete both and nothing leaks
+    ps.apply_ready_pushes()
+    assert ps.cluster.total_pins() == 3
+    ps.complete_batch(ws2, np.zeros((3, EMB), np.float32), np.zeros((3, OPT), np.float32))
+    assert ps.cluster.total_pins() == 0
+    assert ps.n_inflight() == 0
+
+
+def test_abort_wakes_blocked_conflicting_prepare(ps):
+    """abort_batch must wake a prepare blocked on the aborted batch's keys;
+    the waiter falls back to pulling the (current) cluster rows instead of
+    hanging forever on a results token that will never be signalled."""
+    ws1 = ps.prepare_batch(keys(1, 2, 3), batch_id=0)
+    out = {}
+
+    def prepare_next():
+        out["ws"] = ps.prepare_batch(keys(2, 3, 4), batch_id=1)
+
+    t = threading.Thread(target=prepare_next)
+    t.start()
+    time.sleep(0.15)
+    assert t.is_alive(), "prepare(i+1) should await batch i"
+    baseline = ps.cluster.pull(keys(2, 3), pin=False)  # pre-abort rows
+    ps.abort_batch(ws1)
+    t.join(5.0)
+    assert not t.is_alive(), "abort left the conflicting prepare blocked"
+    ws2 = out["ws"]
+    i2, i3 = np.searchsorted(ws2.keys, [2, 3])
+    np.testing.assert_array_equal(ws2.params[[i2, i3]], baseline[:, :EMB])
+    ps.abort_batch(ws2)
+    assert ps.cluster.total_pins() == 0
+    assert ps.n_inflight() == 0
+
+
+def test_abort_fallback_forwards_from_older_unpushed_holder(ps):
+    """When the awaited holder is aborted, the waiter must re-scan for an
+    older in-flight holder of the same keys: a trained-but-unpushed batch
+    may still carry an update the cluster copy lacks."""
+    ws_block = ps.prepare_batch(keys(99), batch_id=0)  # untrained: blocks push order
+    ws_a = ps.prepare_batch(keys(5), batch_id=1)
+    new_p = np.full((1, EMB), 7.0, np.float32)
+    new_o = np.full((1, OPT), 8.0, np.float32)
+    ps.finish_batch(ws_a, new_p, new_o)  # trained, but push blocked behind batch 0
+    ws_b = ps.prepare_batch(keys(5), batch_id=2)  # forwards from ws_a
+    np.testing.assert_array_equal(ws_b.params, new_p)
+    out = {}
+
+    def prepare_c():
+        out["ws"] = ps.prepare_batch(keys(5), batch_id=3)
+
+    t = threading.Thread(target=prepare_c)
+    t.start()
+    time.sleep(0.15)
+    assert t.is_alive()  # awaiting ws_b's training
+    ps.abort_batch(ws_b)
+    t.join(5.0)
+    assert not t.is_alive()
+    # the fallback must carry ws_a's unpushed update, not the stale SSD row
+    np.testing.assert_array_equal(out["ws"].params, new_p)
+    np.testing.assert_array_equal(out["ws"].opt_state, new_o)
+    for w in (ws_block, out["ws"]):
+        ps.abort_batch(w)
+    ps.drain()
+    assert ps.cluster.total_pins() == 0
+
+
+def test_deferred_push_applies_in_order_and_on_drain(ps):
+    ws1 = ps.prepare_batch(keys(1, 2), batch_id=0)
+    ps.finish_batch(ws1, np.full((2, EMB), 1.0, np.float32), np.zeros((2, OPT), np.float32))
+    # nothing pushed yet: the push waits for the pull/push stage thread
+    assert ps.n_inflight() == 1
+    ps.drain()
+    assert ps.n_inflight() == 0
+    rows = ps.cluster.pull(keys(1, 2), pin=False)
+    np.testing.assert_array_equal(rows[:, :EMB], np.full((2, EMB), 1.0))
+    assert ps.cluster.total_pins() == 0
+
+
+def test_drain_unpins_untrained_batches(ps):
+    ps.prepare_batch(keys(1, 2, 3), batch_id=0)
+    assert ps.cluster.total_pins() == 3
+    ps.drain()  # e.g. the pipeline died before the train stage ran
+    assert ps.cluster.total_pins() == 0
+    assert ps.n_inflight() == 0
+
+
+def test_abort_batch_unpins_and_unregisters(ps):
+    ws = ps.prepare_batch(keys(5, 6), batch_id=0)
+    ps.abort_batch(ws)
+    assert ps.cluster.total_pins() == 0
+    assert ps.n_inflight() == 0
+    # the same external id can now be prepared again (no stale dedup hit)
+    ws2 = ps.prepare_batch(keys(5, 6), batch_id=0)
+    assert ws2 is not ws
+    assert ps.cluster.total_pins() == 2
+    ps.abort_batch(ws2)
+
+
+def test_trainer_straggler_timeout_leaks_no_pins(tmp_path):
+    """End-to-end pin-leak regression: with an aggressive straggler timeout
+    every pull/push job overruns, but the stage is non-idempotent so no
+    speculative re-execution (and no double pinning) happens."""
+    cl = Cluster(2, str(tmp_path / "ps"), dim=TINY.emb_dim * 2, cache_capacity=2048,
+                 file_capacity=128, init_cols=TINY.emb_dim)
+    tr = CTRTrainer(TINY, cl, TrainerConfig(stage_timeout=1e-4))
+    s = SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example, TINY.n_slots,
+                           TINY.batch_size, seed=2)
+    res = tr.run(s, 5)
+    assert len(res) == 5
+    assert tr.ps.stats.dedup_reuses == 0  # nothing re-executed at all
+    assert cl.total_pins() == 0, "pins leaked across the pipelined run"
+    assert tr.ps.n_inflight() == 0
+
+
+def test_partial_pull_failure_rolls_back_pins(tmp_path):
+    """A pull that fails on a later node (NodeDownError / pin pressure)
+    must unpin the segments it already served — retries of the pull/push
+    stage would otherwise accumulate stranded pins on the healthy nodes."""
+    cl = Cluster(3, str(tmp_path / "ps"), dim=EMB + OPT, cache_capacity=512,
+                 file_capacity=32, init_cols=EMB)
+    cl.kill_node(2)
+    all_keys = np.arange(200, dtype=np.uint64)  # spans all three shards
+    with pytest.raises(Exception):
+        cl.pull(all_keys, pin=True)
+    assert cl.total_pins() == 0, "healthy nodes kept the failed pull's pins"
+    # MEM-PS pin-pressure failure inside one node rolls back the same way
+    cl2 = Cluster(1, str(tmp_path / "ps2"), dim=EMB + OPT, cache_capacity=32,
+                  file_capacity=32, init_cols=EMB)
+    cl2.pull(np.arange(32, dtype=np.uint64), pin=True)  # cache fully pinned
+    with pytest.raises(MemoryError):
+        cl2.pull(np.arange(100, 140, dtype=np.uint64), pin=True)
+    assert cl2.total_pins() == 32  # only the first pull's pins remain
+
+
+def test_eval_prepare_does_not_taint_device_residency(tmp_path):
+    """The train_ctr_e2e.py flow: an eval-style prepare_batch + abort_batch
+    between training runs must not leave the registry believing those keys
+    are device-resident — the next run would device-serve rows that never
+    reached the device and train zeros in their place."""
+    def trainer(tag):
+        cl = Cluster(2, str(tmp_path / tag), dim=TINY.emb_dim * 2, cache_capacity=2048,
+                     file_capacity=128, init_cols=TINY.emb_dim)
+        return CTRTrainer(TINY, cl, TrainerConfig())
+
+    tainted, clean = trainer("t"), trainer("c")
+    stream = lambda: SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example,
+                                        TINY.n_slots, TINY.batch_size, seed=9)
+    eval_stream = SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example,
+                                     TINY.n_slots, TINY.batch_size, seed=4)
+    ws = tainted.ps.prepare_batch(eval_stream.next_batch().keys)  # eval pull
+    tainted.ps.abort_batch(ws)
+    got = [r["loss"] for r in tainted.run(stream(), 4)]
+    want = [r["loss"] for r in clean.run(stream(), 4)]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_two_trainer_configs_do_not_share_state(tmp_path):
+    c1, c2 = TrainerConfig(), TrainerConfig()
+    assert c1 is not c2
+    cl = Cluster(1, str(tmp_path / "ps"), dim=TINY.emb_dim * 2, cache_capacity=256,
+                 file_capacity=32, init_cols=TINY.emb_dim)
+    t1 = CTRTrainer(TINY, cl)
+    t2 = CTRTrainer(TINY, cl)
+    assert t1.tcfg is not t2.tcfg  # no shared mutable default instance
+    t1.tcfg.queue_capacity = 99
+    assert t2.tcfg.queue_capacity == 2

@@ -1,11 +1,17 @@
-"""4-stage pipeline: overlap, back-pressure, stragglers, failures."""
+"""4-stage pipeline: overlap, back-pressure, stragglers, failures, shutdown."""
 
 import threading
 import time
 
 import pytest
 
-from repro.core.pipeline import Pipeline, PipelineError, Stage
+from repro.core.pipeline import (
+    DependencyAborted,
+    DependencyRegistry,
+    Pipeline,
+    PipelineError,
+    Stage,
+)
 
 
 def sleeper(dur):
@@ -103,3 +109,133 @@ def test_permanent_failure_surfaces():
     pipe = Pipeline([Stage("bad", bad, max_retries=1)])
     with pytest.raises(PipelineError):
         list(pipe.run(range(3)))
+
+
+def test_non_idempotent_stage_never_speculated():
+    """A stage with side effects (e.g. pull/push pinning MEM-PS rows) must
+    not be re-executed by straggler speculation: each job runs exactly once
+    even when it blows way past the straggler timeout."""
+    calls = []
+    lock = threading.Lock()
+
+    def slow_side_effect(x):
+        with lock:
+            calls.append(x)
+        time.sleep(0.15)  # every job is a "straggler" vs timeout=0.01
+        return x
+
+    pipe = Pipeline([Stage("pins", slow_side_effect, timeout=0.01, idempotent=False)])
+    out = list(pipe.run(range(4)))
+    assert out == [0, 1, 2, 3]
+    assert sorted(calls) == [0, 1, 2, 3], f"re-executed jobs: {calls}"
+    assert pipe.stats[0].speculative_wins == 0
+
+
+def test_abandoned_consumer_releases_workers():
+    """Abandoning the run() iterator early must not leave a worker thread
+    blocked forever in a full-queue put (it would keep its batch's rows
+    pinned): every put/get is stop-aware and queues drain on shutdown."""
+    def slow_sink(x):
+        time.sleep(0.05)
+        return x
+
+    pipe = Pipeline([Stage("fast", lambda x: x, capacity=2),
+                     Stage("slow", slow_sink, capacity=2)])
+    it = pipe.run(range(1000))
+    assert next(it) == 0
+    it.close()  # consumer walks away mid-stream
+    deadline = time.monotonic() + 5.0
+    for t in pipe._threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    assert not any(t.is_alive() for t in pipe._threads), "leaked worker thread"
+
+
+def test_downstream_error_releases_blocked_upstream():
+    """An error in the sink stage stops upstream workers that are blocked
+    pushing into full queues (they previously never observed _stop)."""
+    def boom(x):
+        if x == 3:
+            raise ValueError("boom")
+        time.sleep(0.01)
+        return x
+
+    pipe = Pipeline([Stage("src", lambda x: x, capacity=1),
+                     Stage("boom", boom, capacity=1, max_retries=0)])
+    with pytest.raises(PipelineError):
+        list(pipe.run(range(1000)))
+    deadline = time.monotonic() + 5.0
+    for t in pipe._threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    assert not any(t.is_alive() for t in pipe._threads), "leaked worker thread"
+
+
+def test_dependency_registry_signal_wait_abort():
+    reg = DependencyRegistry()
+    reg.signal(("trained", 1))
+    reg.wait(("trained", 1))  # already done: returns immediately
+    got = {}
+
+    def waiter():
+        try:
+            reg.wait(("trained", 2))
+            got["ok"] = True
+        except DependencyAborted:
+            got["aborted"] = True
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()  # genuinely blocked on the unsignalled token
+    reg.signal(("trained", 2))
+    t.join(2.0)
+    assert got.get("ok")
+
+    t2 = threading.Thread(target=waiter)  # waits on ("trained", 2): done
+    t2.start()
+    t2.join(2.0)
+    assert not t2.is_alive()
+
+    reg2 = DependencyRegistry()
+    res = {}
+
+    def waiter2():
+        try:
+            reg2.wait(("trained", 9))
+        except DependencyAborted:
+            res["aborted"] = True
+
+    t3 = threading.Thread(target=waiter2)
+    t3.start()
+    time.sleep(0.02)
+    reg2.abort()
+    t3.join(2.0)
+    assert res.get("aborted")
+    reg2.reset()
+    with pytest.raises(TimeoutError):
+        reg2.wait(("trained", 9), timeout=0.05)
+
+
+def test_error_aborts_dependency_waiters():
+    """A stage crash must wake stages blocked on dependency tokens."""
+    deps = DependencyRegistry()
+    state = {}
+
+    def stage_a(x):
+        if x == 1:
+            time.sleep(0.05)  # let stage b start waiting on item 0's token
+            raise ValueError("dead producer")
+        return x
+
+    def stage_b(x):
+        try:  # waits for a token the dead producer will never signal
+            deps.wait(("token", x))
+        except DependencyAborted:
+            state["released"] = True
+            raise
+        return x
+
+    pipe = Pipeline([Stage("a", stage_a, max_retries=0),
+                     Stage("b", stage_b, max_retries=0)], deps=deps)
+    with pytest.raises(PipelineError):
+        list(pipe.run(range(5)))
+    assert state.get("released")
