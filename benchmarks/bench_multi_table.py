@@ -1,0 +1,82 @@
+"""Multi-table client throughput: prepare/commit sessions over co-hosted
+named tables on one cluster.
+
+Measures the session hot path (namespace -> dedup -> conflict scan -> pull
+-> renumber, then commit -> pack -> push) per table, and the aggregate
+rows/s with two heterogeneous tables (emb 8 training rows + emb 32 serving
+rows) interleaving on the shared MEM/SSD hierarchy — the co-hosting
+scenario the multi-table API exists for. Read-only (serving) sessions are
+benched separately: they skip pins and the in-flight registry entirely.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit, note
+from repro.core.client import PSClient
+from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
+
+
+def _zipf_keys(rng, n_keys: int, size: int) -> np.ndarray:
+    z = rng.zipf(1.1, size=size)
+    return ((z - 1) % n_keys).astype(np.uint64)
+
+
+def main() -> None:
+    note("multi-table PS client: session prepare/commit throughput")
+    n_keys = 50_000 if QUICK else 200_000
+    batch = 4096
+    rounds = 10 if QUICK else 30
+    specs = [
+        TableSpec("train8", RowSchema.with_adagrad(8)),  # width 16
+        TableSpec("serve32", RowSchema.embedding(32)),  # width 32 (cluster max)
+    ]
+    with tempfile.TemporaryDirectory() as tmp:
+        cluster = Cluster(2, tmp, dim=32, cache_capacity=4 * batch,
+                          file_capacity=4096)
+        client = PSClient(cluster, specs)
+        rng = np.random.default_rng(0)
+        # warm both tables so the steady state is cache-hot with eviction
+        for name in ("train8", "serve32"):
+            with client.session(name, _zipf_keys(rng, n_keys, batch)) as s:
+                s.abort()
+
+        t_table: dict[str, float] = {"train8": 0.0, "serve32": 0.0}
+        rows_done = 0
+        for _ in range(rounds):
+            for name, spec in ((n.name, n) for n in specs):
+                keys = _zipf_keys(rng, n_keys, batch)
+                t0 = time.perf_counter()
+                s = client.session(name, keys)
+                new_p = s.params * np.float32(1.01)
+                new_o = s.opt_state if spec.schema.opt_dim else None
+                s.commit(new_p, new_o)
+                t_table[name] += time.perf_counter() - t0
+                rows_done += s.n_working
+        total = sum(t_table.values())
+        for name, t in t_table.items():
+            emit(f"multi_table.session.{name}", t / rounds * 1e6,
+                 f"sessions_per_s={rounds / t:.1f}")
+        emit("multi_table.prepare_commit", total / (2 * rounds) * 1e6,
+             f"rows_per_s={rows_done / total:.0f}")
+
+        # serving reads: no pins, no registry, int8-able wire format
+        t0 = time.perf_counter()
+        ro_rows = 0
+        for _ in range(rounds):
+            with client.session("serve32", _zipf_keys(rng, n_keys, batch),
+                                read_only=True) as s:
+                ro_rows += s.n_working
+        t_ro = time.perf_counter() - t0
+        emit("multi_table.read_only", t_ro / rounds * 1e6,
+             f"rows_per_s={ro_rows / t_ro:.0f}")
+        assert cluster.total_pins() == 0, "bench leaked pins"
+
+
+if __name__ == "__main__":
+    main()

@@ -135,8 +135,8 @@ def run_model(tag: str, cfg: CTRConfig, tmp: str, n_batches: int, storage: bool)
     def flat_batch():
         b = s.next_batch()
         cl.pull(all_keys, pin=False)  # full model moves
-        ws = tr3.ps.prepare_batch(b.keys)
-        item = tr3._stage_transfer((b, ws))
+        sess = tr3.client.session(tr3.table, b.keys)
+        item = tr3._stage_transfer((b, sess))
         tr3._stage_train(item)
         cl.push(all_keys, np.zeros((len(all_keys), cfg.emb_dim * 2), np.float32), unpin=False)
 

@@ -3,10 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
 Set BENCH_QUICK=1 for a fast pass.
 
-``--smoke`` runs the MEM-PS hot-path bench and the pipeline-overlap bench
-in quick mode (a few minutes) and refreshes ``BENCH_mem_ps.json`` +
-``BENCH_pipeline.json`` — the regression gates for PRs that touch the host
-hierarchy's batch path or the pipeline/overlap path.
+``--smoke`` runs the MEM-PS hot-path bench, the pipeline-overlap bench and
+the multi-table session bench in quick mode (a few minutes) and refreshes
+``BENCH_mem_ps.json`` + ``BENCH_pipeline.json`` — the regression gates for
+PRs that touch the host hierarchy's batch path, the pipeline/overlap path,
+or the client session layer.
 """
 
 from __future__ import annotations
@@ -22,13 +23,18 @@ MODULES = [
     "benchmarks.bench_time_distribution",  # Fig 3c
     "benchmarks.bench_hbm_ps",  # Fig 4a
     "benchmarks.bench_mem_ps",  # Fig 4b + perf trajectory
+    "benchmarks.bench_multi_table",  # multi-table client sessions
     "benchmarks.bench_cache",  # Fig 4c
     "benchmarks.bench_ssd",  # Fig 5a
     "benchmarks.bench_scalability",  # Fig 5b
     "benchmarks.bench_kernels",  # kernel layer
 ]
 
-SMOKE_MODULES = ["benchmarks.bench_mem_ps", "benchmarks.bench_pipeline_speedup"]
+SMOKE_MODULES = [
+    "benchmarks.bench_mem_ps",
+    "benchmarks.bench_pipeline_speedup",
+    "benchmarks.bench_multi_table",
+]
 
 
 def main(argv: list[str] | None = None) -> None:

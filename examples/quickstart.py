@@ -1,8 +1,9 @@
 """Quickstart: the hierarchical parameter server in ~60 lines.
 
-Builds a 2-node PS cluster (MEM-PS cache over SSD-PS files), pulls a
-batch's working set, trains k mini-batches on device, pushes updates back —
-Algorithm 1 of the paper, end to end.
+Builds a 2-node PS cluster (MEM-PS cache over SSD-PS files), opens a named
+table on it, pulls a batch session's working set, trains k mini-batches on
+device, commits the updates back — Algorithm 1 of the paper, end to end,
+through the multi-table client API (PSClient / TableSpec / BatchSession).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,8 +14,9 @@ import jax
 import numpy as np
 
 from repro.configs.ctr_models import TINY
-from repro.core.hier_ps import HierarchicalPS
+from repro.core.client import PSClient
 from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
 from repro.data.synthetic_ctr import SyntheticCTRStream
 from repro.models import ctr as ctr_model
 from repro.train.optim import AdamW
@@ -25,12 +27,13 @@ def main():
     cfg = TINY
     tmp = tempfile.mkdtemp(prefix="hps_quickstart_")
 
-    # 3-tier PS: SSD files <- DRAM cache <- device working table
+    # 3-tier PS: SSD files <- DRAM cache <- device working table. The
+    # cluster hosts one named table whose rows pack [emb | adagrad accum].
     cluster = Cluster(
-        n_nodes=2, base_dir=tmp, dim=cfg.emb_dim * 2,  # row = [emb | adagrad]
-        cache_capacity=4096, file_capacity=128, init_cols=cfg.emb_dim,
+        n_nodes=2, base_dir=tmp, dim=cfg.emb_dim * 2,
+        cache_capacity=4096, file_capacity=128,
     )
-    ps = HierarchicalPS(cluster, cfg.emb_dim, cfg.emb_dim)
+    client = PSClient(cluster, [TableSpec("ctr", RowSchema.with_adagrad(cfg.emb_dim))])
 
     tower = ctr_model.init_tower(cfg, jax.random.PRNGKey(0))
     opt = AdamW(lr=1e-3)
@@ -42,22 +45,23 @@ def main():
     )
     for i in range(10):
         batch = stream.next_batch()
-        ws = ps.prepare_batch(batch.keys)  # pull + dedup + renumber (pinned)
-
-        k = cfg.minibatches_per_batch
-        mb = cfg.batch_size // k
-        stack = lambda a: jax.numpy.asarray(a.reshape((k, mb) + a.shape[1:]))
-        minibatches = {
-            "slot_ids": stack(ws.slots),
-            "slot_of": stack(batch.slot_of),
-            "valid": stack(batch.valid),
-            "labels": stack(batch.labels),
-        }
-        tower, opt_state, table, accum, metrics = step(
-            tower, opt_state, jax.numpy.asarray(ws.params), jax.numpy.asarray(ws.opt_state), minibatches
-        )
-        ps.complete_batch(ws, np.asarray(table), np.asarray(accum))  # push + unpin
-        print(f"batch {i}: loss={float(metrics['loss']):.4f} working_set={ws.n_working}")
+        # session = pull + dedup + renumber (pinned); commit = push + unpin
+        with client.session("ctr", batch.keys) as s:
+            k = cfg.minibatches_per_batch
+            mb = cfg.batch_size // k
+            stack = lambda a: jax.numpy.asarray(a.reshape((k, mb) + a.shape[1:]))
+            minibatches = {
+                "slot_ids": stack(s.slots),
+                "slot_of": stack(batch.slot_of),
+                "valid": stack(batch.valid),
+                "labels": stack(batch.labels),
+            }
+            tower, opt_state, table, accum, metrics = step(
+                tower, opt_state, jax.numpy.asarray(s.params),
+                jax.numpy.asarray(s.opt_state), minibatches
+            )
+            s.commit(np.asarray(table), np.asarray(accum))
+        print(f"batch {i}: loss={float(metrics['loss']):.4f} working_set={s.n_working}")
 
     hits = sum(n.mem.stats.hits for n in cluster.nodes)
     misses = sum(n.mem.stats.misses for n in cluster.nodes)

@@ -2,9 +2,12 @@
 
 Demonstrates the serving substrate with the paper's technique live on the
 input side: each request batch's unique token ids are pulled from the PS
-cluster into a working table; decode steps look up new tokens against it
-(missing rows are pulled between steps — the serve-side analogue of the
-MEM-PS pull).
+cluster through a **read-only session** (no MEM-PS pins, no in-flight
+registry — a decode loop must never accumulate pin pressure); decode steps
+look up new tokens against fresh 1-row-per-seq sessions (hot rows come
+from the MEM-PS cache). ``--wire-quantize`` opts remote reads into the
+int8 row-sparse wire format (serving reads tolerate quantization;
+training pulls always stay exact).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--new-tokens 32]
 """
@@ -18,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config, replace
-from repro.core.hier_ps import HierarchicalPS
-from repro.core.node import Cluster
+from repro.core.client import PSClient
+from repro.core.node import Cluster, NetworkModel
+from repro.core.tables import RowSchema, TableSpec
 from repro.models import transformer as T
 from repro.models.attention import KVCache
 from repro.serve.serve_step import greedy_sample
@@ -30,6 +34,8 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--wire-quantize", action="store_true",
+                    help="int8 wire format for remote serving reads")
     args = ap.parse_args()
 
     cfg = replace(
@@ -42,29 +48,29 @@ def main():
 
     tmp = tempfile.mkdtemp(prefix="hps_serve_")
     cluster = Cluster(2, tmp, dim=cfg.d_model, cache_capacity=4096,
-                      file_capacity=256, init_scale=0.02)
-    ps = HierarchicalPS(cluster, cfg.d_model, 0)
+                      file_capacity=256, init_scale=0.02,
+                      network=NetworkModel(wire_quantize=args.wire_quantize))
+    # serving table: embedding only, no optimizer slots in the row
+    client = PSClient(cluster, [TableSpec("tok_emb", RowSchema.embedding(cfg.d_model))])
 
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)
     ).astype(np.uint64)
 
-    # --- prefill: pull the prompt's working set, renumber, run
-    ws = ps.prepare_batch(prompts)
-    table = jnp.asarray(ws.params)
+    # --- prefill: read-only session over the prompt's working set
     prefill = jax.jit(lambda p, t, wt: T.prefill(cfg, p, t, working_table=wt))
     t0 = time.perf_counter()
-    logits, cache = prefill(params, jnp.asarray(ws.slots), table)
+    with client.session("tok_emb", prompts, read_only=True) as s:
+        logits, cache = prefill(params, jnp.asarray(s.slots), jnp.asarray(s.params))
     pad = max_len - args.prompt_len
     cache = KVCache(
         jnp.pad(cache.k, ((0, 0),) * 3 + ((0, pad), (0, 0))),
         jnp.pad(cache.v, ((0, 0),) * 3 + ((0, pad), (0, 0))),
     )
     t_prefill = time.perf_counter() - t0
-    ps.abort_batch(ws)
 
     # --- decode loop: each new token is pulled into a fresh 1-row-per-seq
-    # working set (hot rows come from the MEM-PS cache)
+    # read-only session (hot rows come from the MEM-PS cache, unpinned)
     decode = jax.jit(
         lambda p, tok, c, pos, wt: T.decode_step(cfg, p, tok, c, pos, working_table=wt)
     )
@@ -72,12 +78,11 @@ def main():
     tok_ids = np.asarray(greedy_sample(logits)).astype(np.uint64)
     t0 = time.perf_counter()
     for i in range(args.new_tokens):
-        ws = ps.prepare_batch(tok_ids)
-        logits, cache = decode(
-            params, jnp.asarray(ws.slots), cache,
-            jnp.int32(args.prompt_len + i), jnp.asarray(ws.params),
-        )
-        ps.abort_batch(ws)
+        with client.session("tok_emb", tok_ids, read_only=True) as s:
+            logits, cache = decode(
+                params, jnp.asarray(s.slots), cache,
+                jnp.int32(args.prompt_len + i), jnp.asarray(s.params),
+            )
         tok_ids = np.asarray(greedy_sample(logits)).astype(np.uint64)
         out_tokens.append(tok_ids[:, 0])
     t_decode = time.perf_counter() - t0
@@ -88,6 +93,10 @@ def main():
     hits = sum(n.mem.stats.hits for n in cluster.nodes)
     misses = sum(n.mem.stats.misses for n in cluster.nodes)
     print(f"PS hit rate across decode pulls: {hits/(hits+misses):.1%}")
+    if args.wire_quantize:
+        net = cluster.network
+        print(f"wire-quantized replies: {net.quantized_messages} "
+              f"({net.quantize_bytes_saved/2**10:.0f} KiB saved on the NIC)")
     print("sampled:", np.stack(out_tokens, axis=1)[0][:16], "...")
     cluster.destroy()
 

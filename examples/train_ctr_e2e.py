@@ -2,9 +2,11 @@
 hierarchical PS for a few hundred batches.
 
 ~100M trained parameters = 6M sparse keys x emb 8 (params + adagrad state
-stream through MEM-PS/SSD-PS as one row) + dense tower. Runs the complete
-production path: 4-stage pipeline, multi-node pulls, cache eviction, SSD
-compaction, async checkpoints, AUC eval on held-out traffic.
+stream through MEM-PS/SSD-PS as one row on the named "ctr" table) + dense
+tower. Runs the complete production path: 4-stage pipeline over PSClient
+batch sessions, multi-node pulls, cache eviction, SSD compaction, async
+checkpoints (manifest records the table specs), and AUC eval on held-out
+traffic through read-only sessions (no pins, no registry).
 
 Run:  PYTHONPATH=src python examples/train_ctr_e2e.py [--batches 200]
 """
@@ -33,12 +35,13 @@ def evaluate_auc(tr: CTRTrainer, cfg: CTRConfig, n_batches: int = 4) -> float:
     scores, labels = [], []
     for _ in range(n_batches):
         b = stream.next_batch()
-        ws = tr.ps.prepare_batch(b.keys)
-        logits = ctr_model.forward(
-            cfg, tr.tower, jnp.asarray(ws.params),
-            jnp.asarray(ws.slots), jnp.asarray(b.slot_of), jnp.asarray(b.valid),
-        )
-        tr.ps.abort_batch(ws)  # eval only: unpin without updates
+        # read-only session: no pins, no in-flight registry — eval traffic
+        # can never taint the training pipeline's device residency
+        with tr.client.session(tr.table, b.keys, read_only=True) as s:
+            logits = ctr_model.forward(
+                cfg, tr.tower, jnp.asarray(s.params),
+                jnp.asarray(s.slots), jnp.asarray(b.slot_of), jnp.asarray(b.valid),
+            )
         scores.append(np.asarray(logits))
         labels.append(b.labels)
     return auc(np.concatenate(labels), np.concatenate(scores))

@@ -2,9 +2,11 @@
 an assigned architecture family).
 
 A reduced yi-style decoder trains on synthetic zipf tokens; the token
-embedding lives in the PS cluster (SSD + cache), pulled per batch as a
-working table with row-Adagrad state, while the backbone trains under AdamW
-— the exact integration the full-scale dry-run lowers for all 10 archs.
+embedding lives in a named PS table ("tok_emb", rows = [emb | adagrad]),
+pulled per batch as a working-table session, while the backbone trains
+under AdamW — the exact integration the full-scale dry-run lowers for all
+10 archs. Because tables are named and key-namespaced, this LM table can
+co-host with CTR slot tables on the same cluster (tests/test_system.py).
 
 Run:  PYTHONPATH=src python examples/train_lm_hierps.py [--steps 100]
 """
@@ -18,8 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config, replace
-from repro.core.hier_ps import HierarchicalPS
+from repro.core.client import PSClient
 from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
 from repro.data.tokens import TokenStream
 from repro.models import transformer as T
 from repro.train.optim import AdamW
@@ -44,8 +47,10 @@ def main():
 
     tmp = tempfile.mkdtemp(prefix="hps_lm_")
     cluster = Cluster(2, tmp, dim=cfg.d_model * 2, cache_capacity=6000,
-                      file_capacity=512, init_cols=cfg.d_model, init_scale=0.02)
-    ps = HierarchicalPS(cluster, cfg.d_model, cfg.d_model)
+                      file_capacity=512, init_scale=0.02)
+    client = PSClient(
+        cluster, [TableSpec("tok_emb", RowSchema.with_adagrad(cfg.d_model))]
+    )
 
     settings = TrainSettings(optimizer=AdamW(lr=3e-4), microbatches=1, row_lr=0.1)
     step = jax.jit(make_lm_train_step_hier(cfg, settings))
@@ -57,16 +62,16 @@ def main():
     for i in range(args.steps):
         toks = stream.next_batch()
         inputs, targets = toks[:, :-1], toks[:, 1:]
-        ws = ps.prepare_batch(inputs.astype(np.uint64))
-        batch = {"tokens": jnp.asarray(ws.slots), "targets": jnp.asarray(targets)}
-        params, opt_state, metrics, new_t, new_acc = step(
-            params, opt_state, batch, jnp.asarray(ws.params), jnp.asarray(ws.opt_state)
-        )
-        ps.complete_batch(ws, np.asarray(new_t), np.asarray(new_acc))
+        with client.session("tok_emb", inputs.astype(np.uint64)) as s:
+            batch = {"tokens": jnp.asarray(s.slots), "targets": jnp.asarray(targets)}
+            params, opt_state, metrics, new_t, new_acc = step(
+                params, opt_state, batch, jnp.asarray(s.params), jnp.asarray(s.opt_state)
+            )
+            s.commit(np.asarray(new_t), np.asarray(new_acc))
         losses.append(float(metrics["loss"]))
         if (i + 1) % 20 == 0:
             print(f"step {i+1}: loss {np.mean(losses[-20:]):.4f} "
-                  f"(working set {ws.n_working} rows)")
+                  f"(working set {s.n_working} rows)")
     dt = time.perf_counter() - t0
     print(f"{args.steps} steps in {dt:.0f}s; loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}")
     hits = sum(n.mem.stats.hits for n in cluster.nodes)

@@ -18,6 +18,26 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.tables import RowSchema, TableSpec
+
+
+@dataclass(frozen=True)
+class SlotGroup:
+    """A set of feature slots sharing one embedding table.
+
+    Production CTR models give different feature families (query, ad,
+    user-portrait slots) different embedding widths; each group becomes a
+    named table with its own :class:`RowSchema` on the shared cluster.
+    """
+
+    name: str  # table name on the PS cluster
+    n_slots: int  # feature slots pooled within this group
+    emb_dim: int  # embedding width of this group's table
+
+    @property
+    def pooled_dim(self) -> int:
+        return self.n_slots * self.emb_dim
+
 
 @dataclass(frozen=True)
 class CTRConfig:
@@ -30,15 +50,39 @@ class CTRConfig:
     batch_size: int  # examples per training batch ("HDFS batch")
     minibatches_per_batch: int  # GPU mini-batches per pulled working set
     zipf_a: float = 1.05  # key popularity skew (cache-ability)
+    # heterogeneous embedding widths: slots partitioned into named groups,
+    # each backed by its own PS table. None => one uniform group ("ctr")
+    # of (n_slots, emb_dim) — the single-table layout.
+    slot_groups: tuple[SlotGroup, ...] | None = None
+
+    @property
+    def groups(self) -> tuple[SlotGroup, ...]:
+        if self.slot_groups is not None:
+            return self.slot_groups
+        return (SlotGroup("ctr", self.n_slots, self.emb_dim),)
+
+    @property
+    def pooled_dim(self) -> int:
+        """Tower input width: per-slot sum-pools concatenated across groups."""
+        return sum(g.pooled_dim for g in self.groups)
 
     @property
     def dense_params(self) -> int:
-        dims = (self.n_slots * self.emb_dim,) + self.mlp_hidden + (1,)
+        dims = (self.pooled_dim,) + self.mlp_hidden + (1,)
         return sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
 
     @property
     def sparse_params(self) -> int:
-        return self.n_sparse_keys * self.emb_dim
+        # each slot group draws from its own n_sparse_keys-sized key space
+        return sum(self.n_sparse_keys * g.emb_dim for g in self.groups)
+
+
+def table_specs(cfg: CTRConfig) -> list[TableSpec]:
+    """One named training table per slot group: ``[emb | adagrad]`` rows.
+
+    The hosting cluster's row width must be ``>= 2 * max(emb_dim)`` across
+    groups; narrower groups use a row prefix (fixed-size-value design)."""
+    return [TableSpec(g.name, RowSchema.with_adagrad(g.emb_dim)) for g in cfg.groups]
 
 
 def _scale(name: str, keys: int, nnz: int, hidden: tuple[int, ...], batch: int) -> CTRConfig:
@@ -86,6 +130,21 @@ STORAGE_BENCH = CTRConfig(
     mlp_hidden=(64, 32),
     batch_size=1024,
     minibatches_per_batch=8,
+)
+
+# heterogeneous per-slot embedding widths: "query"-style slots at width 4,
+# "ad"-style slots at width 8, each group a named table on one cluster
+# (cluster row width = 2 * max emb = 16; the width-8 rows use a prefix)
+TINY_HETERO = CTRConfig(
+    name="ctr-tiny-hetero",
+    n_sparse_keys=1_000,
+    nnz_per_example=16,
+    emb_dim=8,  # max width (used for cluster sizing helpers)
+    n_slots=8,
+    mlp_hidden=(16, 8),
+    batch_size=64,
+    minibatches_per_batch=2,
+    slot_groups=(SlotGroup("query", 4, 4), SlotGroup("ad", 4, 8)),
 )
 
 # a tiny config for unit tests

@@ -1,3 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# The user-facing PS surface: named tables + batch sessions over one
+# shared HBM/MEM/SSD cluster (DESIGN.md §6).
+from repro.core.client import BatchSession, PSClient, SessionStateError  # noqa: F401
+from repro.core.tables import RowSchema, TableRegistry, TableSpec  # noqa: F401

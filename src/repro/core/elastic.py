@@ -15,23 +15,24 @@ import os
 import numpy as np
 
 from repro.core.keys import key_to_node
-from repro.core.node import Cluster, NetworkModel
+from repro.core.node import Cluster
 
 
 def reshard(cluster: Cluster, new_n_nodes: int, new_base_dir: str) -> Cluster:
-    """Build a new cluster with ``new_n_nodes`` holding the same live rows."""
+    """Build a new cluster with ``new_n_nodes`` holding the same live rows.
+
+    The new cluster is rebuilt from ``cluster.ctor_kwargs()`` — the full
+    construction-parameter set — rather than a hand-picked subset, so no
+    kwarg (file/cache capacities, init scheme, hosted table specs, future
+    additions) silently reverts to its default across a reshard; only the
+    NIC is replaced by a fresh same-parameter instance so the transfer
+    counters below measure this reshard's own traffic. Hosted table specs
+    ride along via ``tables``, keeping every named table's key namespacing
+    and missing-row initializer intact on the new shards."""
     cluster.flush_all()
-    new = Cluster(
-        new_n_nodes,
-        new_base_dir,
-        cluster.dim,
-        cache_capacity=cluster.nodes[0].mem.capacity,
-        file_capacity=cluster.nodes[0].ssd.file_capacity,
-        network=NetworkModel(
-            latency_s=cluster.network.latency_s,
-            bandwidth_gbps=cluster.network.bandwidth_gbps,
-        ),
-    )
+    kw = cluster.ctor_kwargs()
+    kw["network"] = cluster.network.fresh()
+    new = Cluster(new_n_nodes, new_base_dir, cluster.dim, **kw)
     # stage rows per new owner so each write is one (or few) sequential files
     staged_keys: list[list[np.ndarray]] = [[] for _ in range(new_n_nodes)]
     staged_vals: list[list[np.ndarray]] = [[] for _ in range(new_n_nodes)]

@@ -10,9 +10,14 @@ Per training batch:
   4. after the device finishes its mini-batches, push the updated rows back
      to their owner nodes and unpin.
 
-The SSD row layout packs ``[embedding | optimizer slots]`` in one value so a
-key's full training state moves through MEM-PS/SSD-PS as one fixed-size row
-(the paper's fixed-size-value design).
+Row layout is described by a :class:`~repro.core.tables.RowSchema`: the SSD
+row packs ``[emb | optimizer slots...]`` in one fixed-size value so a key's
+full training state moves through MEM-PS/SSD-PS as one row (the paper's
+fixed-size-value design). A table narrower than the cluster row uses a
+prefix; the tail is kept zero. One engine serves exactly one table — the
+multi-table façade (:class:`repro.core.client.PSClient`) runs one engine
+per named table over the shared cluster, which keeps every guarantee below
+*per table* (namespaced keys cannot conflict across tables).
 
 Lossless pipeline overlap (paper §3-4: the 4-stage pipeline must not change
 the learned model) is implemented with an **in-flight registry**: every
@@ -35,6 +40,11 @@ order before pulling, so SSD/MEM-PS traffic stays off the device stage and
 overlaps the next batch's compute. ``drain()`` applies whatever is left at
 end of stream. The result is bitwise equality with serial execution while
 pull, push and train all overlap.
+
+Completion tokens stay bounded via the registry's floor watermark: once
+every batch up to seq ``s`` has left the in-flight window, the engine
+collapses their tokens into ``DependencyRegistry.set_floor`` — derived
+from the *actual* in-flight window, not a hardcoded token-discard distance.
 """
 
 from __future__ import annotations
@@ -48,6 +58,7 @@ import numpy as np
 from repro.core.keys import member_sorted
 from repro.core.node import Cluster
 from repro.core.pipeline import DependencyRegistry
+from repro.core.tables import RowSchema, TableSpec
 
 
 @dataclass
@@ -97,28 +108,59 @@ class _InFlight:
 
 
 class HierarchicalPS:
-    """Host-side orchestrator over a PS cluster."""
+    """Host-side orchestrator of ONE table over a PS cluster.
+
+    ``spec`` describes the table (schema + key-namespace id); the legacy
+    two-int signature ``HierarchicalPS(cluster, emb_dim, opt_dim)`` still
+    works and builds an anonymous full-width ``[emb | opt]`` spec with
+    table id 0 (whose key tagging is the identity) — the exact pre-
+    multi-table behaviour. Keys passed to this engine are already in
+    cluster key space; namespacing raw per-table keys is the session
+    layer's job (:class:`repro.core.client.BatchSession`).
+    """
 
     def __init__(
         self,
         cluster: Cluster,
-        emb_dim: int,
+        emb_dim: int | None = None,
         opt_dim: int = 0,
         deps: DependencyRegistry | None = None,
+        spec: TableSpec | None = None,
     ):
         self.cluster = cluster
-        self.emb_dim = emb_dim
-        self.opt_dim = opt_dim
-        assert cluster.dim == emb_dim + opt_dim, (
-            f"cluster value dim {cluster.dim} != emb {emb_dim} + opt {opt_dim}"
+        if spec is None:
+            assert emb_dim is not None, "pass emb_dim/opt_dim or spec"
+            assert cluster.dim == emb_dim + opt_dim, (
+                f"cluster value dim {cluster.dim} != emb {emb_dim} + opt {opt_dim}"
+            )
+            schema = (
+                RowSchema.embedding(emb_dim)
+                if opt_dim == 0
+                else RowSchema.with_slots(emb_dim, opt=opt_dim)
+            )
+            spec = TableSpec("default", schema, table_id=0)
+        self.spec = spec
+        self.schema = spec.schema
+        self.emb_dim = self.schema.emb_dim
+        self.opt_dim = self.schema.opt_dim
+        self.width = self.schema.width
+        assert cluster.dim >= self.width, (
+            f"cluster row width {cluster.dim} < table schema width {self.width}"
         )
         self.deps = deps or DependencyRegistry()
+        # one token family per table: engines sharing a DependencyRegistry
+        # (PSClient) must not collide on their per-batch sequence numbers
+        self._token_family = ("trained", self.spec.table_id)
         self.stats = PSStats()
         self._batch_counter = 0
         self._lock = threading.RLock()  # registry state
         self._push_lock = threading.Lock()  # serializes deferred pushes
         self._inflight: "OrderedDict[int, _InFlight]" = OrderedDict()
         self._ext_to_seq: dict[int, int] = {}
+        # seqs allocated by a prepare that has not registered yet — they
+        # hold the token floor back so a successor can never see their
+        # token as "already done" before they trained
+        self._preparing: set[int] = set()
         # keys of the last fully-prepared *device-resident* batch (the set
         # the caller keeps on device when device_resident_prev is passed).
         # Any unflagged prepare (eval-style), an abort of that batch, or
@@ -126,6 +168,21 @@ class HierarchicalPS:
         # rows never reached the device would train zeros.
         self._last_prepared_keys: np.ndarray | None = None
         self._last_prepared_seq: int = -1
+
+    # ------------------------------------------------------------- tokens
+    def _trained_token(self, seq: int):
+        return (self._token_family, seq)
+
+    def _floor_bound_locked(self) -> int:
+        """Largest seq known to have left the in-flight window (all tokens
+        at or below it are collapsible). Derived from the registry's actual
+        window: the oldest in-flight or still-preparing batch holds it."""
+        cands = []
+        if self._inflight:
+            cands.append(min(self._inflight))
+        if self._preparing:
+            cands.append(min(self._preparing))
+        return (min(cands) if cands else self._batch_counter) - 1
 
     # ----------------------------------------------------------- pull side
     def prepare_batch(
@@ -185,33 +242,45 @@ class HierarchicalPS:
                 holder_seq[m] = s
                 holder_pos[m] = pos[m]
             last_keys = self._last_prepared_keys
+            # last statement under the lock, immediately before the guarded
+            # region: nothing between add and the except can leak the seq
+            # (a leaked seq would hold the token floor back forever)
+            self._preparing.add(seq)
 
-        # keys of the previous prepared batch are served from the
-        # device-resident HBM-PS copy: no host value, no waiting — the
-        # device remap is inherently ordered after that batch's train step,
-        # and its final device rows are bitwise what its push wrote (so this
-        # holds whether or not that push has landed yet). Push ordering
-        # guarantees no OLDER in-flight batch can still hold such a key.
-        if device_resident_prev and last_keys is not None:
-            device_served, _ = member_sorted(last_keys, uniq)
-        else:
-            device_served = np.zeros(n, dtype=bool)
-        fresh = (holder_seq < 0) & ~device_served
-        n_fresh = int(fresh.sum())
-        if n_fresh == n:
-            # conflict-free (every serial batch after its predecessor's push
-            # landed): the pulled buffer is freshly allocated per batch, so
-            # the working set views straight into it — no re-copy
-            rows = self.cluster.pull(uniq, requester=requester, pin=True)
-        else:
-            rows = np.zeros((n, self.cluster.dim), dtype=np.float32)
-            if n_fresh:
-                # the overlap win: fresh rows pull while predecessors train
-                rows[fresh] = self.cluster.pull(uniq[fresh], requester=requester, pin=True)
+        try:
+            # keys of the previous prepared batch are served from the
+            # device-resident HBM-PS copy: no host value, no waiting — the
+            # device remap is inherently ordered after that batch's train
+            # step, and its final device rows are bitwise what its push wrote
+            # (so this holds whether or not that push has landed yet). Push
+            # ordering guarantees no OLDER in-flight batch still holds such
+            # a key.
+            if device_resident_prev and last_keys is not None:
+                device_served, _ = member_sorted(last_keys, uniq)
+            else:
+                device_served = np.zeros(n, dtype=bool)
+            fresh = (holder_seq < 0) & ~device_served
+            n_fresh = int(fresh.sum())
+            if n_fresh == n:
+                # conflict-free (every serial batch after its predecessor's
+                # push landed): the pulled buffer is freshly allocated per
+                # batch, so the working set views straight into it
+                rows = self.cluster.pull(uniq, requester=requester, pin=True)
+            else:
+                rows = np.zeros((n, self.cluster.dim), dtype=np.float32)
+                if n_fresh:
+                    # the overlap win: fresh rows pull while predecessors train
+                    rows[fresh] = self.cluster.pull(
+                        uniq[fresh], requester=requester, pin=True
+                    )
+        except BaseException:
+            with self._lock:
+                self._preparing.discard(seq)
+            raise
         ws = WorkingSet(
             keys=uniq,
-            params=rows if self.opt_dim == 0 else rows[:, : self.emb_dim],
-            opt_state=rows[:, self.emb_dim :],
+            params=rows[:, : self.emb_dim],
+            opt_state=rows[:, self.emb_dim : self.width],
             slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
             batch_id=seq,
         )
@@ -220,6 +289,7 @@ class HierarchicalPS:
             entry.pinned.append(uniq[fresh])
         with self._lock:
             self._inflight[seq] = entry
+            self._preparing.discard(seq)
             if batch_id is not None:
                 self._ext_to_seq[batch_id] = seq
         self.stats.batches_prepared += 1
@@ -282,7 +352,7 @@ class HierarchicalPS:
         while work:
             s, idx, pos = work.pop(0)
             src = entries[s]
-            self.deps.wait(("trained", s))
+            self.deps.wait(self._trained_token(s))
             if src.new_params is None:
                 # aborted without training (token signalled by abort/drain):
                 # an older in-flight batch may still hold a pending update
@@ -310,11 +380,9 @@ class HierarchicalPS:
                     pulled = self.cluster.pull(
                         uniq[unheld], requester=entry.requester, pin=True
                     )
-                    ws.params[unheld] = (
-                        pulled if self.opt_dim == 0 else pulled[:, : self.emb_dim]
-                    )
+                    ws.params[unheld] = pulled[:, : self.emb_dim]
                     if self.opt_dim:
-                        ws.opt_state[unheld] = pulled[:, self.emb_dim :]
+                        ws.opt_state[unheld] = pulled[:, self.emb_dim : self.width]
                     entry.pinned.append(uniq[unheld])
                     self.stats.rows_pulled += len(unheld)
                 continue
@@ -352,10 +420,7 @@ class HierarchicalPS:
                 None if new_opt_state is None else np.asarray(new_opt_state, dtype=np.float32)
             )
             entry.trained = True
-        self.deps.signal(("trained", ws.batch_id))
-        # keep the token set bounded: nothing can conflict with (and so wait
-        # on) a batch this far outside the pipeline's in-flight window
-        self.deps.discard(("trained", ws.batch_id - 64))
+        self.deps.signal(self._trained_token(ws.batch_id))
 
     def apply_ready_pushes(self) -> int:
         """Apply the deferred pushes of every trained in-flight batch, oldest
@@ -373,14 +438,20 @@ class HierarchicalPS:
                     self._inflight.pop(entry.seq, None)
                     if entry.ext_id is not None:
                         self._ext_to_seq.pop(entry.ext_id, None)
+                    # collapse the departed batches' tokens into the floor
+                    # watermark (bounded token set, no hardcoded window)
+                    self.deps.set_floor(self._token_family, self._floor_bound_locked())
                 applied += 1
                 self.stats.deferred_pushes += 1
 
     def _push_entry(self, entry: _InFlight) -> None:
         ws = entry.ws
-        rows = np.empty((ws.n_working, self.cluster.dim), dtype=np.float32)
+        full = self.width == self.cluster.dim
+        rows = (np.empty if full else np.zeros)(
+            (ws.n_working, self.cluster.dim), dtype=np.float32
+        )
         rows[:, : self.emb_dim] = entry.new_params
-        rows[:, self.emb_dim :] = (
+        rows[:, self.emb_dim : self.width] = (
             entry.new_opt if entry.new_opt is not None else ws.opt_state
         )
         self.cluster.push(ws.keys, rows, requester=entry.requester, unpin=True)
@@ -424,9 +495,11 @@ class HierarchicalPS:
                 self._last_prepared_keys = None  # residency ends with the run
                 self._last_prepared_seq = -1
             for entry in remaining:
-                self.deps.signal(("trained", entry.seq))  # wake any waiter
+                self.deps.signal(self._trained_token(entry.seq))  # wake waiters
                 for keys in entry.pinned:
                     self.cluster.unpin(keys)
+            with self._lock:
+                self.deps.set_floor(self._token_family, self._floor_bound_locked())
 
     def abort_batch(self, ws: WorkingSet) -> None:
         """Unpin without applying (failure path)."""
@@ -439,7 +512,9 @@ class HierarchicalPS:
                 self._last_prepared_seq = -1
         # wake any prepare blocked on this batch's keys; it will see the
         # missing results and fall back to pulling the (current) cluster copy
-        self.deps.signal(("trained", ws.batch_id))
+        self.deps.signal(self._trained_token(ws.batch_id))
+        with self._lock:
+            self.deps.set_floor(self._token_family, self._floor_bound_locked())
         pinned = entry.pinned if entry is not None else [ws.keys]
         for keys in pinned:
             self.cluster.unpin(keys)
@@ -452,7 +527,9 @@ class HierarchicalPS:
             if entry.seq == self._last_prepared_seq:
                 self._last_prepared_keys = None
                 self._last_prepared_seq = -1
-        self.deps.signal(("trained", entry.seq))
+        self.deps.signal(self._trained_token(entry.seq))
+        with self._lock:
+            self.deps.set_floor(self._token_family, self._floor_bound_locked())
         if unpin:
             for keys in entry.pinned:
                 self.cluster.unpin(keys)

@@ -19,6 +19,40 @@ _MIX1 = np.uint64(0xBF58476D1CE4E5B9)
 _MIX2 = np.uint64(0x94D049BB133111EB)
 _U64 = np.uint64
 
+# --- table namespacing (multi-table PS client, DESIGN.md §6) ---------------
+# The top TABLE_BITS of a cluster key tag which named table the row belongs
+# to; the low KEY_BITS carry the caller's raw key. Table id 0 tags to the
+# identity, so a single anonymous table (the pre-multi-table API) lives in
+# exactly the same key space as before.
+TABLE_BITS = 8
+KEY_BITS = 64 - TABLE_BITS
+MAX_TABLES = 1 << TABLE_BITS
+MAX_RAW_KEY = np.uint64((1 << KEY_BITS) - 1)  # inclusive
+_RAW_MASK = np.uint64((1 << KEY_BITS) - 1)
+
+
+def namespace_keys(keys: np.ndarray, table_id: int) -> np.ndarray:
+    """Tag raw per-table keys into the shared cluster key space.
+
+    The tag occupies the high TABLE_BITS, so two tables' keys can never
+    collide; the hash-partitioned owner map then spreads each table's rows
+    across all nodes (splitmix64 mixes the high bits into every output bit).
+    """
+    if not 0 <= table_id < MAX_TABLES:
+        raise ValueError(f"table_id {table_id} out of range [0, {MAX_TABLES})")
+    keys = np.asarray(keys, dtype=np.uint64)
+    if keys.size and bool((keys > _RAW_MASK).any()):
+        raise ValueError(f"raw keys must fit in {KEY_BITS} bits (max {int(_RAW_MASK)})")
+    if table_id == 0:
+        return keys
+    return keys | _U64(table_id << KEY_BITS)
+
+
+def split_namespaced(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`namespace_keys`: (table_ids int64, raw uint64)."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    return (keys >> _U64(KEY_BITS)).astype(np.int64), keys & _RAW_MASK
+
 
 def splitmix64(x: np.ndarray) -> np.ndarray:
     """Bijective 64-bit finalizer (vectorized). Input/output uint64."""

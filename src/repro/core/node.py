@@ -16,6 +16,7 @@ pull, failure, reshard) are real code paths.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import shutil
 import threading
@@ -24,23 +25,36 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.compression import sparse_decode, sparse_encode
 from repro.core.keys import key_to_node, partition_by_owner
 from repro.core.mem_ps import MemParameterServer
 from repro.core.ssd_ps import SSDParameterServer
+from repro.core.tables import TableRegistry
 
 
 @dataclass
 class NetworkModel:
-    """Simulated NIC: per-message latency + bandwidth (default ~100Gb RDMA)."""
+    """Simulated NIC: per-message latency + bandwidth (default ~100Gb RDMA).
+
+    ``wire_quantize=True`` opts remote *serving-style* reads (``pull`` with
+    ``pin=False``) into the int8 row-sparse wire format of
+    :mod:`repro.core.compression`; bytes-on-wire then count the encoded
+    packet, and ``quantize_bytes_saved`` feeds the Fig-4b accounting.
+    Training pulls (pinned) and pushes always stay exact — quantizing them
+    would break the bitwise lossless guarantee.
+    """
 
     latency_s: float = 5e-6
     bandwidth_gbps: float = 100.0
     real_sleep: bool = False
     time_scale: float = 1.0  # scale factor applied when sleeping
+    wire_quantize: bool = False  # int8 wire format for serving reads
 
     virtual_time: float = 0.0
     bytes_moved: int = 0
     messages: int = 0
+    quantized_messages: int = 0
+    quantize_bytes_saved: int = 0  # raw f32 bytes minus encoded packet bytes
 
     def transfer(self, nbytes: int) -> float:
         dt = self.latency_s + nbytes * 8.0 / (self.bandwidth_gbps * 1e9)
@@ -50,6 +64,15 @@ class NetworkModel:
         if self.real_sleep:
             time.sleep(dt * self.time_scale)
         return dt
+
+    def fresh(self) -> "NetworkModel":
+        """Same link parameters, zeroed counters (reshard target NIC).
+        ``replace`` copies every field by construction — a future parameter
+        can't silently revert to its default here."""
+        return dataclasses.replace(
+            self, virtual_time=0.0, bytes_moved=0, messages=0,
+            quantized_messages=0, quantize_bytes_saved=0,
+        )
 
 
 class NodeDownError(RuntimeError):
@@ -117,6 +140,7 @@ class Cluster:
         network: NetworkModel | None = None,
         init_scale: float = 0.01,
         init_cols: int | None = None,
+        tables: TableRegistry | None = None,
     ):
         self.n_nodes = n_nodes
         self.base_dir = base_dir
@@ -129,12 +153,29 @@ class Cluster:
         self.init_scale = init_scale
         self.init_cols = init_cols
         self.network = network or NetworkModel()
+        self.tables: TableRegistry | None = None
         self.nodes = [
             PSNode(i, base_dir, dim, cache_capacity, file_capacity, init_scale, init_cols)
             for i in range(n_nodes)
         ]
+        if tables is not None:
+            self.register_tables(tables)
         self.pull_local_time = 0.0
         self.pull_remote_time = 0.0
+
+    def register_tables(self, tables: TableRegistry) -> None:
+        """Host a set of named tables: installs the registry's schema-aware
+        missing-row initializer on every node's SSD-PS (each table's ``emb``
+        field gets its own deterministic init; the row tail beyond the
+        table's schema width stays zero)."""
+        if tables.width > self.dim:
+            raise ValueError(
+                f"cluster row width {self.dim} < widest table schema {tables.width}"
+            )
+        self.tables = tables
+        init = tables.initializer(self.dim, self.init_scale, self.init_cols)
+        for node in self.nodes:
+            node.ssd.initializer = init
 
     # ------------------------------------------------------------ protocol
     def owner_of(self, keys: np.ndarray) -> np.ndarray:
@@ -180,7 +221,17 @@ class Cluster:
             else:
                 # request keys out + rows back over the NIC
                 self.network.transfer((hi - lo) * 8)
-                self.network.transfer(vals.nbytes)
+                if self.network.wire_quantize and not pin:
+                    # serving-style read: the reply crosses the wire in the
+                    # int8 row-sparse format; the requester sees the decoded
+                    # (lossy) rows. Pinned (training) pulls stay exact.
+                    pkt = sparse_encode(sorted_keys[lo:hi], vals, quantize=True)
+                    self.network.transfer(pkt.nbytes)
+                    self.network.quantized_messages += 1
+                    self.network.quantize_bytes_saved += max(0, vals.nbytes - pkt.nbytes)
+                    vals = sparse_decode(pkt)[1]
+                else:
+                    self.network.transfer(vals.nbytes)
                 self.pull_remote_time += elapsed
             sorted_out[lo:hi] = vals
         out = np.empty_like(sorted_out)
@@ -240,13 +291,16 @@ class Cluster:
         return sum(n.mem.total_pins for n in self.nodes if n.alive)
 
     def ctor_kwargs(self) -> dict:
-        """The non-positional construction parameters, for restore()."""
+        """ALL non-positional construction parameters, for restore() and
+        elastic.reshard() — rebuilding from a hand-picked subset silently
+        reverts any parameter the subset misses to its default."""
         return {
             "cache_capacity": self.cache_capacity,
             "file_capacity": self.file_capacity,
             "network": self.network,
             "init_scale": self.init_scale,
             "init_cols": self.init_cols,
+            "tables": self.tables,
         }
 
     # ------------------------------------------------------------ lifecycle
@@ -263,20 +317,29 @@ class Cluster:
 
     def manifest(self) -> dict:
         self.flush_all()
-        return {
+        out = {
             "n_nodes": self.n_nodes,
             "dim": self.dim,
             "nodes": {n.node_id: n.ssd.manifest() for n in self.nodes},
         }
+        if self.tables is not None:
+            # checkpoints record the hosted table specs, so a restore (or a
+            # reshard from a manifest) reconstructs the same named tables
+            out["tables"] = self.tables.to_manifest()
+        return out
 
     @classmethod
     def restore(cls, manifest: dict, base_dir: str, **kw) -> "Cluster":
+        if kw.get("tables") is None and manifest.get("tables"):
+            kw["tables"] = TableRegistry.from_manifest(manifest["tables"])
         c = cls(manifest["n_nodes"], base_dir, manifest["dim"], **kw)
         nodes = manifest["nodes"]
         for node in c.nodes:
             m = nodes.get(node.node_id, nodes.get(str(node.node_id)))  # JSON strs
             node.ssd = SSDParameterServer.from_manifest(node.dir, m)
             node.mem = MemParameterServer(node.ssd, capacity=node.mem.capacity)
+        if c.tables is not None:
+            c.register_tables(c.tables)  # re-install on the restored SSDs
         return c
 
     def destroy(self) -> None:

@@ -59,6 +59,7 @@ class DependencyRegistry:
     def __init__(self):
         self._cond = threading.Condition()
         self._done: set[Hashable] = set()
+        self._floors: dict[Hashable, int] = {}
         self._aborted = False
 
     def signal(self, token: Hashable) -> None:
@@ -72,14 +73,35 @@ class DependencyRegistry:
         with self._cond:
             self._done.discard(token)
 
+    def set_floor(self, family: Hashable, upto: int) -> None:
+        """Collapse every token ``(family, seq)`` with ``seq <= upto`` into
+        one permanently-signalled watermark: they count as done forever and
+        are dropped from the done-set. This is how a producer of monotone
+        sequence tokens keeps the set bounded *without* the hang risk of
+        ``discard`` — a late waiter on a collapsed token returns
+        immediately instead of blocking on a token that will never
+        reappear. Floors only move forward."""
+        with self._cond:
+            if self._floors.get(family, upto - 1) >= upto:
+                return
+            self._floors[family] = upto
+            self._done = {t for t in self._done if not self._under_floor(t)}
+            self._cond.notify_all()
+
+    def _under_floor(self, token: Hashable) -> bool:
+        if not (isinstance(token, tuple) and len(token) == 2):
+            return False
+        floor = self._floors.get(token[0])
+        return floor is not None and isinstance(token[1], int) and token[1] <= floor
+
     def is_done(self, token: Hashable) -> bool:
         with self._cond:
-            return token in self._done
+            return token in self._done or self._under_floor(token)
 
     def wait(self, token: Hashable, timeout: float | None = None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
-            while token not in self._done:
+            while token not in self._done and not self._under_floor(token):
                 if self._aborted:
                     raise DependencyAborted(f"pipeline stopped before {token!r}")
                 remaining = _POLL_S if deadline is None else min(
@@ -95,13 +117,14 @@ class DependencyRegistry:
             self._cond.notify_all()
 
     def reset(self) -> None:
-        """Clear a previous abort AND all signalled tokens (a fresh pipeline
-        run reuses the registry; stale tokens would satisfy a new run's
-        waits instantly). Call only with no waiter in flight — Pipeline.run
-        does so before starting its workers."""
+        """Clear a previous abort AND all signalled tokens/floors (a fresh
+        pipeline run reuses the registry; stale tokens would satisfy a new
+        run's waits instantly). Call only with no waiter in flight —
+        Pipeline.run does so before starting its workers."""
         with self._cond:
             self._aborted = False
             self._done.clear()
+            self._floors.clear()
 
 
 @dataclass

@@ -88,6 +88,7 @@ class SSDParameterServer:
         init_cols: int | None = None,
         auto_compact: bool = True,
         lock: bool = True,
+        initializer=None,
     ):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
@@ -98,6 +99,9 @@ class SSDParameterServer:
         # rows for unseen keys: random-init the first init_cols columns
         # (embedding), zero the rest (optimizer slots ride along in the row)
         self.init_cols = dim if init_cols is None else int(init_cols)
+        # optional schema-aware override: a callable (keys) -> [n, dim] rows
+        # (installed by the cluster's TableRegistry for multi-table hosting)
+        self.initializer = initializer
         self.auto_compact = auto_compact
         self._next_file_id = 0
         self.files: dict[int, FileMeta] = {}
@@ -190,11 +194,14 @@ class SSDParameterServer:
                     out[found[s:e]] = vals[floc[s:e] % self.file_capacity]
             missing = locs < 0
             if missing.any():
-                fresh = np.zeros((int(missing.sum()), self.dim), dtype=np.float32)
-                fresh[:, : self.init_cols] = deterministic_init(
-                    keys[missing], self.init_cols, self.init_scale
-                )
-                out[missing] = fresh
+                if self.initializer is not None:
+                    out[missing] = self.initializer(keys[missing])
+                else:
+                    fresh = np.zeros((int(missing.sum()), self.dim), dtype=np.float32)
+                    fresh[:, : self.init_cols] = deterministic_init(
+                        keys[missing], self.init_cols, self.init_scale
+                    )
+                    out[missing] = fresh
         return out
 
     def contains(self, key: int) -> bool:

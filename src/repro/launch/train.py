@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core.hier_ps import HierarchicalPS
+from repro.core.client import PSClient
 from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
 from repro.data.tokens import TokenStream
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_host_mesh
@@ -66,12 +67,13 @@ def main():
     step = jax.jit(make_lm_train_step_hier(cfg, settings))
 
     base = args.ckpt_dir or tempfile.mkdtemp(prefix=f"train_{args.arch.replace('/', '_')}_")
+    tok_table = TableSpec("tok_emb", RowSchema.with_adagrad(cfg.d_model))
     cluster = Cluster(
         args.nodes, os.path.join(base, "ps"), dim=cfg.d_model * 2,
         cache_capacity=max(4096, 4 * args.batch * args.seq),
-        file_capacity=1024, init_cols=cfg.d_model, init_scale=0.02,
+        file_capacity=1024, init_scale=0.02,
     )
-    ps = HierarchicalPS(cluster, cfg.d_model, cfg.d_model)
+    client = PSClient(cluster, [tok_table])
     checkpointer = ckpt.AsyncCheckpointer(os.path.join(base, "ckpt"))
 
     start = 0
@@ -81,8 +83,10 @@ def main():
         )
         params, opt_state = tree["params"], tree["opt"]
         if manifest is not None:
-            cluster = Cluster.restore(manifest, cluster.base_dir)
-            ps = HierarchicalPS(cluster, cfg.d_model, cfg.d_model)
+            cluster = Cluster.restore(manifest, cluster.base_dir, **{
+                **cluster.ctor_kwargs(), "tables": None,  # manifest's specs win
+            })
+            client = PSClient(cluster, [tok_table])
         print(f"resumed from step {start}")
 
     stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=start)
@@ -92,17 +96,16 @@ def main():
         for i in range(start, start + args.steps):
             toks = stream.next_batch()
             inputs, targets = toks[:, :-1], toks[:, 1:]
-            ws = ps.prepare_batch(inputs.astype(np.uint64))
-            batch = {"tokens": jnp.asarray(ws.slots), "targets": jnp.asarray(targets)}
-            extra_kwargs = {}
-            if cfg.family == "audio":
-                batch["frames"] = jnp.zeros((args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
-            if cfg.family == "vlm":
-                batch["image_embeds"] = jnp.zeros((args.batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
-            params, opt_state, metrics, new_t, new_acc = step(
-                params, opt_state, batch, jnp.asarray(ws.params), jnp.asarray(ws.opt_state)
-            )
-            ps.complete_batch(ws, np.asarray(new_t), np.asarray(new_acc))
+            with client.session("tok_emb", inputs.astype(np.uint64)) as s:
+                batch = {"tokens": jnp.asarray(s.slots), "targets": jnp.asarray(targets)}
+                if cfg.family == "audio":
+                    batch["frames"] = jnp.zeros((args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+                if cfg.family == "vlm":
+                    batch["image_embeds"] = jnp.zeros((args.batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+                params, opt_state, metrics, new_t, new_acc = step(
+                    params, opt_state, batch, jnp.asarray(s.params), jnp.asarray(s.opt_state)
+                )
+                s.commit(np.asarray(new_t), np.asarray(new_acc))
             losses.append(float(metrics["loss"]))
             if (i + 1) % 10 == 0:
                 print(f"step {i+1}: loss {np.mean(losses[-10:]):.4f}")

@@ -5,10 +5,16 @@ PS working table) -> per-slot sum pooling -> fully-connected tower ->
 sigmoid CTR. The embedding rows are the "sparse parameters" managed by
 HBM/MEM/SSD-PS; the tower is the small dense part pinned in HBM.
 
-Inputs are padded sparse rows:
+Inputs are padded sparse rows (per table/slot group):
   slots_ids  int32 [B, nnz]  — working-slot ids (renumbered keys)
   slot_of    int32 [B, nnz]  — which feature slot each nonzero belongs to
   valid      bool  [B, nnz]
+
+Heterogeneous embedding widths (``CTRConfig.slot_groups``): each slot
+group is backed by its own named PS table (its own working table at its
+own ``emb_dim``); ``forward_grouped`` pools every group at its native
+width and concatenates into the tower — the multi-table co-hosting layout
+of production ads systems.
 """
 
 from __future__ import annotations
@@ -21,7 +27,7 @@ from repro.models.common import ParamSpec, init_params
 
 
 def tower_schema(cfg: CTRConfig) -> dict:
-    dims = (cfg.n_slots * cfg.emb_dim,) + tuple(cfg.mlp_hidden) + (1,)
+    dims = (cfg.pooled_dim,) + tuple(cfg.mlp_hidden) + (1,)
     out = {}
     for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
         out[f"w{i}"] = ParamSpec((a, b), ("embed", "mlp"), fan_axis=0)
@@ -49,6 +55,23 @@ def embed_pool(
     return pooled.reshape(B, -1)
 
 
+def _tower_mlp(tower, h: jax.Array) -> jax.Array:
+    """The shared fully-connected tower: pooled features -> logits [B]."""
+    n = len([k for k in tower if k.startswith("w")])
+    for i in range(n):
+        h = h @ tower[f"w{i}"] + tower[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h[:, 0]
+
+
+def _bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Numerically-stable mean binary cross-entropy."""
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
 def forward(
     cfg: CTRConfig,
     tower,
@@ -58,21 +81,41 @@ def forward(
     valid: jax.Array,
 ) -> jax.Array:
     """Returns CTR logits [B]."""
-    h = embed_pool(working_table, slot_ids, slot_of, valid, cfg.n_slots)
-    n = len([k for k in tower if k.startswith("w")])
-    for i in range(n):
-        h = h @ tower[f"w{i}"] + tower[f"b{i}"]
-        if i < n - 1:
-            h = jax.nn.relu(h)
-    return h[:, 0]
+    return _tower_mlp(tower, embed_pool(working_table, slot_ids, slot_of, valid, cfg.n_slots))
 
 
 def loss_fn(cfg, tower, working_table, slot_ids, slot_of, valid, labels) -> jax.Array:
     """Mean BCE-with-logits."""
-    logits = forward(cfg, tower, working_table, slot_ids, slot_of, valid)
-    return jnp.mean(
-        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return _bce_with_logits(
+        forward(cfg, tower, working_table, slot_ids, slot_of, valid), labels
     )
+
+
+# --------------------------------------------------------------------------
+# heterogeneous slot groups: one working table per group, own emb width
+# --------------------------------------------------------------------------
+
+
+def forward_grouped(cfg, tower, tables: dict, inputs: dict) -> jax.Array:
+    """Multi-table forward: ``tables[g.name]`` is that group's working
+    table [n_working_g, emb_g]; ``inputs[g.name]`` holds the group's padded
+    sparse triple ``{"slot_ids", "slot_of", "valid"}`` (slot_of indexes
+    *within* the group). Pools each group at its native width, concatenates
+    across groups, then runs the shared tower. Returns CTR logits [B]."""
+    pooled = []
+    for g in cfg.groups:
+        inp = inputs[g.name]
+        pooled.append(
+            embed_pool(
+                tables[g.name], inp["slot_ids"], inp["slot_of"], inp["valid"], g.n_slots
+            )
+        )
+    return _tower_mlp(tower, jnp.concatenate(pooled, axis=-1))
+
+
+def loss_fn_grouped(cfg, tower, tables: dict, inputs: dict, labels) -> jax.Array:
+    """Mean BCE-with-logits over the grouped forward."""
+    return _bce_with_logits(forward_grouped(cfg, tower, tables, inputs), labels)
 
 
 # --------------------------------------------------------------------------
@@ -87,7 +130,4 @@ def lr_forward(working_table: jax.Array, slot_ids: jax.Array, valid: jax.Array, 
 
 
 def lr_loss_fn(working_table, slot_ids, valid, labels, bias) -> jax.Array:
-    logits = lr_forward(working_table, slot_ids, valid, bias)
-    return jnp.mean(
-        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
-    )
+    return _bce_with_logits(lr_forward(working_table, slot_ids, valid, bias), labels)

@@ -3,7 +3,10 @@
 Layout: <dir>/step_<N>/ containing
   manifest.json          — treedef paths, shapes/dtypes, step, extra metadata
   arrays.npz             — all pytree leaves (keyed by flattened path)
-  ps_manifest.json       — optional PS cluster manifest (SSD file map)
+  ps_manifest.json       — optional PS cluster manifest: the SSD file map
+                           plus the hosted table specs (name/table_id/
+                           RowSchema), so Cluster.restore rebuilds the same
+                           named tables and their key namespacing
 
 Writes go to a temp dir then ``os.replace`` (atomic on POSIX); a ``latest``
 symlink is flipped last, so a crash mid-save never corrupts the restore

@@ -12,6 +12,11 @@ phase; the host MEM-PS packs them back into one SSD row per key.
 ``make_ctr_train_step`` is the paper's CTR trainer: k mini-batches per pulled
 working set inside ONE jit (Algorithm 1 lines 11-15), row-Adagrad on the
 working table, Adam on the dense tower.
+
+``make_ctr_train_step_grouped`` is its multi-table form: one working table
+(+ accumulator) per slot group, each at its own embedding width, pulled from
+its own named PS table via ``PSClient.session`` — heterogeneous feature
+families co-hosted on one cluster.
 """
 
 from __future__ import annotations
@@ -178,5 +183,45 @@ def make_ctr_train_step(ctr_cfg, row_lr: float = 0.05, tower_opt: AdamW = AdamW(
             one_minibatch, (tower, opt_state, working_table, row_accum), minibatches
         )
         return tower, opt_state, working_table, row_accum, {"loss": jnp.mean(losses)}
+
+    return step
+
+
+def make_ctr_train_step_grouped(ctr_cfg, row_lr: float = 0.05, tower_opt: AdamW = AdamW(lr=1e-3)):
+    """Multi-table CTR step: one working table per slot group, all updated
+    inside one jit.
+
+    step(tower, opt_state, tables, accums, minibatches)
+      -> (tower, opt_state, tables, accums, metrics)
+    tables/accums: {group_name: [n_working_g, emb_g]} per named PS table
+    minibatches: {"labels": [k, mb],
+                  "inputs": {group_name: {"slot_ids","slot_of","valid"}
+                             each stacked [k, mb, nnz_g]}}
+    """
+    from repro.models import ctr as ctr_model
+
+    def step(tower, opt_state, tables, accums, minibatches):
+        def one_minibatch(carry, mb):
+            tower, opt_state, tables, accums = carry
+            loss, grads = jax.value_and_grad(
+                lambda tw, tb: ctr_model.loss_fn_grouped(
+                    ctr_cfg, tw, tb, mb["inputs"], mb["labels"]
+                ),
+                argnums=(0, 1),
+            )(tower, tables)
+            tower, opt_state = tower_opt.update(grads[0], opt_state, tower)
+            # synchronize after every mini-batch (Algorithm 1 line 14),
+            # independently per table
+            new_tables, new_accums = {}, {}
+            for name in tables:
+                new_tables[name], new_accums[name] = kref.adagrad_ref(
+                    tables[name], accums[name], grads[1][name], row_lr
+                )
+            return (tower, opt_state, new_tables, new_accums), loss
+
+        (tower, opt_state, tables, accums), losses = jax.lax.scan(
+            one_minibatch, (tower, opt_state, tables, accums), minibatches
+        )
+        return tower, opt_state, tables, accums, {"loss": jnp.mean(losses)}
 
     return step

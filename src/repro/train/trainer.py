@@ -3,18 +3,20 @@
 Wires together every subsystem the paper describes:
 
   stage 1 (read)      — synthetic HDFS stream -> CTRBatch
-  stage 2 (pull/push) — HierarchicalPS.prepare_batch: applies the deferred
-                        push of completed batches, pulls the new batch's
-                        fresh keys (MEM-PS + SSD-PS + remote pulls), and
-                        resolves cross-batch conflicts by per-key version
-                        forwarding — all SSD/MEM-PS traffic stays on this
-                        stage's thread, overlapped with device compute
+  stage 2 (pull/push) — PSClient.session on the "ctr" table: applies the
+                        deferred push of completed batches, pulls the new
+                        batch's fresh keys (MEM-PS + SSD-PS + remote
+                        pulls), and resolves cross-batch conflicts by
+                        per-key version forwarding — all SSD/MEM-PS
+                        traffic stays on this stage's thread, overlapped
+                        with device compute
   stage 3 (transfer)  — device_put of minibatch tensors + only the *delta*
                         working rows; rows shared with the previous batch
                         stay device-resident (DeviceWorkingSet remap)
   stage 4 (train)     — one jit: k mini-batches + row-Adagrad + tower Adam;
-                        results are deposited for the pull/push stage to
-                        push, keeping this stage pure device compute
+                        results are committed with ``defer=True`` for the
+                        pull/push stage to push, keeping this stage pure
+                        device compute
 
 The overlap is lossless: pipelined and serial execution produce bitwise-
 identical loss trajectories and parameter state (tests/test_system.py).
@@ -33,9 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.ctr_models import CTRConfig
+from repro.configs.ctr_models import CTRConfig, table_specs
+from repro.core.client import PSClient
 from repro.core.hbm_ps import DeviceWorkingSet
-from repro.core.hier_ps import HierarchicalPS, WorkingSet
 from repro.core.node import Cluster
 from repro.core.pipeline import Pipeline, Stage
 from repro.data.synthetic_ctr import CTRBatch, SyntheticCTRStream
@@ -67,8 +69,16 @@ class CTRTrainer:
         # instance would leak one caller's mutations into every other trainer
         self.tcfg = tcfg if tcfg is not None else TrainerConfig()
         tcfg = self.tcfg
-        # SSD row = [emb | adagrad accum] -> opt_dim == emb_dim
-        self.ps = HierarchicalPS(cluster, cfg.emb_dim, cfg.emb_dim)
+        # one named table per slot group (SSD row = [emb | adagrad accum]);
+        # the pipelined trainer drives exactly one — heterogeneous groups
+        # train through the grouped serial step (train_step.py)
+        assert len(cfg.groups) == 1, (
+            "CTRTrainer pipelines a single table; use make_ctr_train_step_grouped "
+            "with per-group sessions for heterogeneous slot_groups"
+        )
+        self.client = PSClient(cluster, table_specs(cfg))
+        self.table = cfg.groups[0].name
+        self.ps = self.client.engine(self.table)  # per-table engine (stats, tests)
         self.dev_ws = DeviceWorkingSet(row_bytes=2 * cfg.emb_dim * 4)
         self.tower = ctr_model.init_tower(cfg, jax.random.PRNGKey(seed))
         self.opt = AdamW(lr=tcfg.tower_lr)
@@ -85,25 +95,26 @@ class CTRTrainer:
 
     # ------------------------------------------------------------ stages
     def _stage_pull(self, batch: CTRBatch):
-        # prepare_batch also applies completed predecessors' deferred pushes
-        # on this thread, then pulls fresh keys / forwards conflicting ones;
-        # batch_id dedups straggler re-execution (no double pinning). With
-        # device reuse on, keys shared with the immediately-preceding batch
-        # are served from the device-resident copy (no host value, no wait)
-        ws = self.ps.prepare_batch(
-            batch.keys, batch_id=batch.batch_id,
+        # opening the session also applies completed predecessors' deferred
+        # pushes on this thread, then pulls fresh keys / forwards
+        # conflicting ones; batch_id dedups straggler re-execution (no
+        # double pinning). With device reuse on, keys shared with the
+        # immediately-preceding batch are served from the device-resident
+        # copy (no host value, no wait)
+        sess = self.client.session(
+            self.table, batch.keys, batch_id=batch.batch_id,
             device_resident_prev=self.tcfg.device_reuse,
         )
-        return batch, ws
+        return batch, sess
 
     def _stage_transfer(self, item):
-        batch, ws = item
+        batch, sess = item
         k = self.cfg.minibatches_per_batch
         B = batch.keys.shape[0]
         mb = B // k
         sl = lambda a: jnp.asarray(a.reshape((k, mb) + a.shape[1:]))
         minibatches = {
-            "slot_ids": sl(ws.slots),
+            "slot_ids": sl(sess.slots),
             "slot_of": sl(batch.slot_of),
             "valid": sl(batch.valid),
             "labels": sl(batch.labels),
@@ -111,17 +122,17 @@ class CTRTrainer:
         if self.tcfg.device_reuse:
             # only the delta crosses the host->device link; rows shared with
             # the previous batch are remapped on device at train time
-            plan = self.dev_ws.plan(ws.keys, batch_id=batch.batch_id)
-            params = jnp.asarray(ws.params[plan.fresh_dst])
-            accum = jnp.asarray(ws.opt_state[plan.fresh_dst])
+            plan = self.dev_ws.plan(sess.keys, batch_id=batch.batch_id)
+            params = jnp.asarray(sess.params[plan.fresh_dst])
+            accum = jnp.asarray(sess.opt_state[plan.fresh_dst])
         else:
             plan = None
-            params = jnp.asarray(ws.params)
-            accum = jnp.asarray(ws.opt_state)
-        return batch, ws, minibatches, plan, params, accum
+            params = jnp.asarray(sess.params)
+            accum = jnp.asarray(sess.opt_state)
+        return batch, sess, minibatches, plan, params, accum
 
     def _stage_train(self, item):
-        batch, ws, minibatches, plan, params, accum = item
+        batch, sess, minibatches, plan, params, accum = item
         if plan is None:
             table, row_accum = params, accum
         else:
@@ -141,24 +152,25 @@ class CTRTrainer:
         self._prev_table, self._prev_accum = new_table, new_accum
         if plan is not None:
             self._train_seq = plan.seq
-        # deposit updated rows (+ optimizer slots); the pull/push stage
-        # thread pushes them through MEM-PS -> SSD-PS and forwards them to
-        # any successor batch waiting on these keys
-        self.ps.finish_batch(ws, np.asarray(new_table), np.asarray(new_accum))
+        # deferred commit: the pull/push stage thread pushes the rows
+        # through MEM-PS -> SSD-PS and forwards them to any successor batch
+        # waiting on these keys — this stage stays pure device compute
+        sess.commit(np.asarray(new_table), np.asarray(new_accum), defer=True)
         loss = float(metrics["loss"])
         self.losses.append(loss)
         self.batches_done += 1
         if self.ckpt and self.batches_done % self.tcfg.checkpoint_every == 0:
             # flush deferred pushes so the manifest captures a consistent
-            # cut: all batches up to and including this one
-            self.ps.apply_ready_pushes()
+            # cut: all batches up to and including this one. The manifest
+            # records the hosted table specs alongside the SSD file map.
+            self.client.apply_ready_pushes()
             self.ckpt.save(
                 self.batches_done,
                 {"tower": self.tower, "opt": self.opt_state},
                 extra={"losses": self.losses[-16:]},
-                ps_manifest=self.cluster.manifest(),
+                ps_manifest=self.client.manifest(),
             )
-        return {"batch_id": batch.batch_id, "loss": loss, "n_working": ws.n_working}
+        return {"batch_id": batch.batch_id, "loss": loss, "n_working": sess.n_working}
 
     # ------------------------------------------------------------ running
     def build_pipeline(self) -> Pipeline:
@@ -181,7 +193,7 @@ class CTRTrainer:
                 Stage("train", self._stage_train, capacity=t.queue_capacity,
                       idempotent=False, max_retries=0),
             ],
-            deps=self.ps.deps,
+            deps=self.client.deps,
         )
 
     def run(self, stream, n_batches: int, pipelined: bool = True):
@@ -197,14 +209,14 @@ class CTRTrainer:
                     results.append(self._stage_train(self._stage_transfer(self._stage_pull(b))))
         except BaseException:
             # failure path: release pins without masking the primary error
-            self.ps.drain(strict=False)
+            self.client.drain(strict=False)
             self.dev_ws.reset()
             raise
         # success path: the tail batches' deferred pushes MUST land (a
         # failure here is a real error) — then drop cross-run device
         # residency: a later run may follow a resume(), where the cached
         # rows no longer match the cluster state
-        self.ps.drain()
+        self.client.drain()
         self.dev_ws.reset()
         if self.ckpt:
             self.ckpt.wait()
@@ -220,11 +232,16 @@ class CTRTrainer:
         self.batches_done = step
         if ps_manifest is not None:
             # rebuild with the original capacities/network model — restoring
-            # with defaults would silently change cache behaviour
-            self.cluster = Cluster.restore(
-                ps_manifest, self.cluster.base_dir, **self.cluster.ctor_kwargs()
-            )
-            self.ps = HierarchicalPS(self.cluster, self.cfg.emb_dim, self.cfg.emb_dim)
+            # with defaults would silently change cache behaviour. The
+            # manifest's recorded table specs win over the live registry
+            # (they describe what the checkpointed rows actually contain).
+            kw = self.cluster.ctor_kwargs()
+            kw["tables"] = None  # defer to the manifest's table specs
+            self.cluster = Cluster.restore(ps_manifest, self.cluster.base_dir, **kw)
+            # re-adding the config's specs is a no-op when the manifest
+            # already recorded them (and covers pre-multi-table manifests)
+            self.client = PSClient(self.cluster, table_specs(self.cfg))
+            self.ps = self.client.engine(self.table)
         self.dev_ws.reset()
         self._prev_table = self._prev_accum = None
         return step

@@ -57,6 +57,52 @@ def test_manifest_restore_roundtrip(tmp_path):
     np.testing.assert_allclose(cl2.pull(keys, pin=False), v * 3)
 
 
+def test_elastic_reshard_preserves_ctor_kwargs_and_tables(tmp_path):
+    """reshard must rebuild the new cluster from the FULL ctor-kwarg set
+    (the hand-picked subset used to silently revert file_capacity/init
+    settings to defaults) and carry the hosted table specs — including
+    their key namespacing and per-table missing-row init — onto the new
+    shards."""
+    from repro.core.client import PSClient
+    from repro.core.keys import deterministic_init
+    from repro.core.node import NetworkModel
+    from repro.core.tables import RowSchema, TableRegistry, TableSpec
+
+    spec = TableSpec("t", RowSchema.with_adagrad(3), table_id=4, init_scale=0.3)
+    cl = Cluster(3, str(tmp_path / "src"), dim=8, cache_capacity=77,
+                 file_capacity=24, init_scale=0.05, init_cols=6,
+                 network=NetworkModel(latency_s=3e-4, bandwidth_gbps=9.0,
+                                      wire_quantize=True),
+                 tables=TableRegistry([spec]))
+    client = PSClient(cl)
+    raw = np.arange(60, dtype=np.uint64)
+    with client.session("t", raw) as s:
+        s.commit(np.full((60, 3), 4.0, np.float32), np.full((60, 3), 5.0, np.float32))
+
+    new = reshard(cl, 2, str(tmp_path / "dst"))
+    # full kwargs carried (file_capacity/init_* used to fall back to defaults)
+    assert new.cache_capacity == 77 and new.file_capacity == 24
+    assert new.init_scale == 0.05 and new.init_cols == 6
+    assert all(n.ssd.file_capacity == 24 for n in new.nodes)
+    assert all(n.mem.capacity == 77 for n in new.nodes)
+    # NIC parameters carried, counters fresh for this reshard's traffic
+    assert new.network.latency_s == 3e-4 and new.network.bandwidth_gbps == 9.0
+    assert new.network.wire_quantize and new.network is not cl.network
+    # table specs carried: rows, namespacing and per-table init all intact
+    # (pinned pulls: the carried wire_quantize=True makes unpinned remote
+    # reads intentionally lossy, training pulls stay exact)
+    assert new.tables is not None and new.tables.get("t") == spec
+    rows = new.pull(spec.namespace(raw), pin=True)
+    new.unpin(spec.namespace(raw))
+    np.testing.assert_array_equal(rows[:, :3], np.full((60, 3), 4.0))
+    np.testing.assert_array_equal(rows[:, 3:6], np.full((60, 3), 5.0))
+    unseen = spec.namespace(np.arange(500, 504, dtype=np.uint64))
+    want = deterministic_init(unseen, 3, 0.3)
+    got = new.pull(unseen, pin=True)
+    new.unpin(unseen)
+    np.testing.assert_array_equal(got[:, :3], want)
+
+
 @pytest.mark.parametrize("new_n", [2, 6])
 def test_elastic_reshard_preserves_rows(tmp_path, new_n):
     cl = make_cluster(tmp_path, n=4)

@@ -1,0 +1,42 @@
+"""API migrations must not silently break the examples/ scripts: every
+example byte-compiles AND resolves its repro imports (the CI workflow also
+byte-compiles them as a separate step)."""
+
+import ast
+import importlib
+import pathlib
+import py_compile
+
+import pytest
+
+EXAMPLES = sorted(
+    (pathlib.Path(__file__).parent.parent / "examples").glob("*.py")
+)
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_byte_compiles(path):
+    py_compile.compile(str(path), doraise=True)
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_repro_imports_resolve(path):
+    """Every ``from repro.x import y`` in an example names a real attribute
+    — catches renamed/removed API symbols without running the example."""
+    tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and node.module.startswith("repro"):
+            mod = importlib.import_module(node.module)
+            for alias in node.names:
+                try:  # the name may be a submodule rather than an attribute
+                    importlib.import_module(f"{node.module}.{alias.name}")
+                    continue
+                except ImportError:
+                    pass
+                assert hasattr(mod, alias.name), (
+                    f"{path.name}: {node.module}.{alias.name} does not exist"
+                )
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro"):
+                    importlib.import_module(alias.name)

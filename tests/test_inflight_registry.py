@@ -228,6 +228,34 @@ def test_eval_prepare_does_not_taint_device_residency(tmp_path):
     np.testing.assert_array_equal(got, want)
 
 
+def test_token_floor_tracks_inflight_window(ps):
+    """Completion tokens are collapsed into a floor watermark derived from
+    the registry's actual in-flight window (not a hardcoded distance): a
+    late waiter on a long-departed batch returns immediately instead of
+    hanging, and the done-set stays bounded over long runs."""
+    n = 100
+    for i in range(n):
+        ws = ps.prepare_batch(keys(i % 7, 7 + i % 5), batch_id=i)
+        ps.complete_batch(ws, np.zeros((ws.n_working, EMB), np.float32),
+                          np.zeros((ws.n_working, OPT), np.float32))
+    fam = ps._token_family
+    # every departed batch's token answers instantly (floor, not hang)
+    for seq in (0, 1, n // 2, n - 1):
+        ps.deps.wait((fam, seq), timeout=0.05)
+        assert ps.deps.is_done((fam, seq))
+    # the done-set itself holds no per-batch backlog
+    assert len(ps.deps._done) == 0
+    assert ps.n_inflight() == 0
+    # an untrained in-flight batch holds the floor back: its own token (and
+    # any later one) must NOT read as done
+    ws = ps.prepare_batch(keys(1, 2), batch_id=n)
+    assert not ps.deps.is_done((fam, ws.batch_id))
+    with pytest.raises(TimeoutError):
+        ps.deps.wait((fam, ws.batch_id), timeout=0.05)
+    ps.abort_batch(ws)
+    ps.deps.wait((fam, ws.batch_id), timeout=0.05)  # abort released it
+
+
 def test_two_trainer_configs_do_not_share_state(tmp_path):
     c1, c2 = TrainerConfig(), TrainerConfig()
     assert c1 is not c2

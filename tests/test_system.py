@@ -1,10 +1,14 @@
 """End-to-end behaviour tests for the hierarchical parameter server system."""
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.configs.ctr_models import TINY
+from repro.core.client import PSClient
 from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
 from repro.data.synthetic_ctr import SyntheticCTRStream
 from repro.train.trainer import CTRTrainer, TrainerConfig
 
@@ -90,6 +94,122 @@ def test_device_working_set_reuse_cuts_bytes(tmp_path):
     assert tr.dev_ws.stats.rows_reused > 0
     assert tr.dev_ws.stats.bytes_saved > 0
     assert tr.dev_ws.stats.rows_reused > tr.dev_ws.stats.rows_transferred // 2
+
+
+def test_two_tables_cohost_ctr_and_lm_on_one_cluster(tmp_path):
+    """Scenario diversity through the multi-table client: a CTR model
+    (emb_dim 4 slot table) and an LM (d_model 64 vocab table) train against
+    ONE shared cluster in one run — different schemas, different widths,
+    namespaced keys. Both workloads must train bit-identically to running
+    each alone on its own cluster (per-table losslessness under
+    co-hosting)."""
+    from repro.configs import get_smoke_config
+    from repro.models import ctr as ctr_model
+    from repro.models import transformer as T
+    from repro.train.optim import AdamW
+    from repro.train.train_step import (
+        TrainSettings,
+        make_ctr_train_step,
+        make_lm_train_step_hier,
+    )
+
+    ctr_cfg = TINY  # emb_dim 4
+    lm_cfg = get_smoke_config("yi-9b")  # hier_ps embedding, d_model 64
+    ctr_spec = TableSpec("ctr_slots", RowSchema.with_adagrad(ctr_cfg.emb_dim), table_id=1)
+    lm_spec = TableSpec("lm_vocab", RowSchema.with_adagrad(lm_cfg.d_model), table_id=2)
+    n_steps = 4
+
+    def lm_data(step, B=4, S=8):
+        k = jax.random.PRNGKey(100 + step)
+        toks = jax.random.randint(k, (B, S + 1), 0, lm_cfg.vocab_size)
+        return np.asarray(toks[:, :-1]), np.asarray(toks[:, 1:])
+
+    def make_steps():
+        ctr_opt = AdamW(lr=1e-3)
+        lm_settings = TrainSettings(
+            optimizer=AdamW(lr=1e-3, clip_norm=0.0), microbatches=1, row_lr=0.05
+        )
+        return (
+            jax.jit(make_ctr_train_step(ctr_cfg, 0.05, ctr_opt)), ctr_opt,
+            jax.jit(make_lm_train_step_hier(lm_cfg, lm_settings)), lm_settings,
+        )
+
+    def train_ctr_batch(client, step, state, batch):
+        tower, opt_state = state
+        with client.session("ctr_slots", batch.keys) as s:
+            k = ctr_cfg.minibatches_per_batch
+            mb = ctr_cfg.batch_size // k
+            sl = lambda a: jnp.asarray(a.reshape((k, mb) + a.shape[1:]))
+            minibatches = {
+                "slot_ids": sl(s.slots), "slot_of": sl(batch.slot_of),
+                "valid": sl(batch.valid), "labels": sl(batch.labels),
+            }
+            tower, opt_state, table, accum, m = step(
+                tower, opt_state, jnp.asarray(s.params), jnp.asarray(s.opt_state),
+                minibatches,
+            )
+            s.commit(np.asarray(table), np.asarray(accum))
+        return (tower, opt_state), float(m["loss"])
+
+    def train_lm_step(client, step, state, i):
+        params, opt_state = state
+        toks, tgts = lm_data(i)
+        with client.session("lm_vocab", toks.astype(np.uint64)) as s:
+            batch = {"tokens": jnp.asarray(s.slots), "targets": jnp.asarray(tgts)}
+            params, opt_state, m, new_t, new_acc = step(
+                params, opt_state, batch, jnp.asarray(s.params), jnp.asarray(s.opt_state)
+            )
+            s.commit(np.asarray(new_t), np.asarray(new_acc))
+        return (params, opt_state), float(m["loss"])
+
+    def final_rows(client, table):
+        client.cluster.flush_all()
+        spec = client.table(table)
+        n = ctr_cfg.n_sparse_keys if table == "ctr_slots" else lm_cfg.vocab_size
+        keys = spec.namespace(np.arange(n, dtype=np.uint64))
+        return client.cluster.pull(keys, pin=False)[:, : spec.schema.width]
+
+    def run(tag, tables):
+        """tables: which specs this cluster hosts (cohosted or solo)."""
+        dim = 2 * max(lm_cfg.d_model if lm_spec in tables else 0,
+                      ctr_cfg.emb_dim if ctr_spec in tables else 0)
+        cl = Cluster(2, str(tmp_path / tag), dim=dim, cache_capacity=2048,
+                     file_capacity=64)
+        client = PSClient(cl, tables)
+        ctr_step, ctr_opt, lm_step, lm_settings = make_steps()
+        ctr_state = lm_state = None
+        ctr_losses, lm_losses = [], []
+        if ctr_spec in tables:
+            tower = ctr_model.init_tower(ctr_cfg, jax.random.PRNGKey(0))
+            ctr_state = (tower, ctr_opt.init(tower))
+            stream = SyntheticCTRStream(ctr_cfg.n_sparse_keys, ctr_cfg.nnz_per_example,
+                                        ctr_cfg.n_slots, ctr_cfg.batch_size, seed=11)
+        if lm_spec in tables:
+            lm_params = T.init(lm_cfg, jax.random.PRNGKey(0))
+            lm_state = (lm_params, lm_settings.optimizer.init(lm_params))
+        for i in range(n_steps):  # interleave the two workloads
+            if ctr_state is not None:
+                ctr_state, l = train_ctr_batch(client, ctr_step, ctr_state,
+                                               stream.next_batch())
+                ctr_losses.append(l)
+            if lm_state is not None:
+                lm_state, l = train_lm_step(client, lm_step, lm_state, i)
+                lm_losses.append(l)
+        assert cl.total_pins() == 0 and client.n_inflight() == 0
+        return client, ctr_losses, lm_losses
+
+    both, ctr_l, lm_l = run("both", [ctr_spec, lm_spec])
+    ctr_rows = final_rows(both, "ctr_slots")
+    lm_rows = final_rows(both, "lm_vocab")
+    assert all(np.isfinite(ctr_l)) and all(np.isfinite(lm_l))
+
+    solo_ctr, ctr_l_solo, _ = run("ctr", [ctr_spec])
+    solo_lm, _, lm_l_solo = run("lm", [lm_spec])
+    np.testing.assert_array_equal(ctr_l, ctr_l_solo)
+    np.testing.assert_array_equal(lm_l, lm_l_solo)
+    # per-table rows bit-identical: co-hosting perturbs neither workload
+    np.testing.assert_array_equal(ctr_rows, final_rows(solo_ctr, "ctr_slots"))
+    np.testing.assert_array_equal(lm_rows, final_rows(solo_lm, "lm_vocab"))
 
 
 def test_cache_and_ssd_actually_used(cluster):

@@ -1,0 +1,336 @@
+"""Multi-table PS client API: RowSchema/TableSpec namespacing, BatchSession
+commit/abort semantics, and the two-table dict-model parity harness
+(namespaced keys never collide; per-table rows bit-identical whether a
+table is co-hosted or runs alone)."""
+
+import numpy as np
+import pytest
+
+from repro.core.client import PSClient, SessionStateError
+from repro.core.keys import (
+    KEY_BITS,
+    deterministic_init,
+    namespace_keys,
+    split_namespaced,
+)
+from repro.core.node import Cluster, NetworkModel
+from repro.core.tables import RowSchema, TableRegistry, TableSpec
+
+
+# --------------------------------------------------------------- schemas
+
+
+def test_row_schema_layout_and_slices():
+    s = RowSchema.with_slots(8, m=4, v=4, step=1)
+    assert s.width == 17 and s.emb_dim == 8 and s.opt_dim == 9
+    assert s.slice_of("emb") == slice(0, 8)
+    assert s.slice_of("m") == slice(8, 12)
+    assert s.slice_of("step") == slice(16, 17)
+    assert RowSchema.embedding(6).opt_dim == 0
+    assert RowSchema.with_adagrad(5).width == 10
+
+
+def test_row_schema_validation():
+    with pytest.raises(ValueError):
+        RowSchema(())
+    with pytest.raises(ValueError):
+        RowSchema((("emb", 4), ("emb", 2)))
+    with pytest.raises(ValueError):
+        RowSchema((("emb", 0),))
+    s = RowSchema.with_adagrad(4)
+    with pytest.raises(KeyError):
+        s.slice_of("nope")
+
+
+def test_schema_manifest_roundtrip():
+    s = RowSchema.with_slots(8, m=3, v=3)
+    assert RowSchema.from_manifest(s.to_manifest()) == s
+    spec = TableSpec("ads", s, table_id=7, init_scale=0.05)
+    assert TableSpec.from_manifest(spec.to_manifest()) == spec
+    reg = TableRegistry([spec, TableSpec("lm", RowSchema.embedding(16))])
+    reg2 = TableRegistry.from_manifest(reg.to_manifest())
+    assert [t.name for t in reg2] == [t.name for t in reg]
+    assert reg2.get("ads") == spec and reg2.width == reg.width
+
+
+# ---------------------------------------------------------- namespacing
+
+
+def test_namespace_keys_identity_for_table_zero():
+    k = np.array([0, 1, 2**40, (1 << KEY_BITS) - 1], dtype=np.uint64)
+    np.testing.assert_array_equal(namespace_keys(k, 0), k)
+
+
+def test_namespace_keys_never_collide_across_tables():
+    k = np.arange(1000, dtype=np.uint64)
+    tagged = [namespace_keys(k, t) for t in (0, 1, 2, 255)]
+    allk = np.concatenate(tagged)
+    assert len(np.unique(allk)) == len(allk)
+    for t, tk in zip((0, 1, 2, 255), tagged):
+        tids, raw = split_namespaced(tk)
+        assert (tids == t).all()
+        np.testing.assert_array_equal(raw, k)
+
+
+def test_namespace_keys_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        namespace_keys(np.array([1 << KEY_BITS], dtype=np.uint64), 1)
+    with pytest.raises(ValueError):
+        namespace_keys(np.array([1], dtype=np.uint64), 256)
+
+
+def test_registry_assigns_free_ids_and_rejects_conflicts():
+    reg = TableRegistry()
+    a = reg.add(TableSpec("a", RowSchema.embedding(4)))
+    b = reg.add(TableSpec("b", RowSchema.embedding(4)))
+    assert (a.table_id, b.table_id) == (0, 1)
+    c = reg.add(TableSpec("c", RowSchema.embedding(8), table_id=5))
+    assert c.table_id == 5
+    assert reg.add(TableSpec("a", RowSchema.embedding(4))) is a  # idempotent
+    with pytest.raises(ValueError):
+        reg.add(TableSpec("a", RowSchema.embedding(2)))  # same name, new schema
+    with pytest.raises(ValueError):
+        reg.add(TableSpec("d", RowSchema.embedding(2), table_id=5))  # id taken
+    with pytest.raises(ValueError):
+        # an explicit id is the key namespace: NEVER silently remapped —
+        # honoring it with id 0 taken must reject, not reassign
+        reg.add(TableSpec("e", RowSchema.embedding(2), table_id=0))
+    assert reg.width == 8
+
+
+def test_unregistered_spec_cannot_namespace():
+    spec = TableSpec("floating", RowSchema.embedding(4))  # no id yet
+    with pytest.raises(ValueError, match="no table_id"):
+        spec.namespace(np.array([1], dtype=np.uint64))
+
+
+# ------------------------------------------------- two-table dict model
+
+
+def _ref_init(spec, raw_keys, scale):
+    """The reference model's missing-row value: deterministic init of the
+    emb field from the *namespaced* key, optimizer slots zero."""
+    row = np.zeros((len(raw_keys), spec.schema.width), dtype=np.float32)
+    row[:, : spec.schema.emb_dim] = deterministic_init(
+        spec.namespace(np.asarray(raw_keys, dtype=np.uint64)), spec.schema.emb_dim, scale
+    )
+    return row
+
+
+def _dict_model_pull(ref, spec, raw_keys, scale):
+    out = np.empty((len(raw_keys), spec.schema.width), dtype=np.float32)
+    for i, k in enumerate(raw_keys):
+        got = ref.get((spec.name, int(k)))
+        out[i] = got if got is not None else _ref_init(spec, [k], scale)[0]
+    return out
+
+
+def _update(rows, salt):
+    """A value-dependent update so divergence compounds across rounds."""
+    return (rows * 1.25 + salt).astype(np.float32)
+
+
+def test_two_tables_dict_model_parity(tmp_path):
+    """Two tables with different schemas over ONE cluster, interleaved
+    update streams sharing raw key values: a per-table dict model must
+    match every flushed row bit-for-bit, proving the namespaced key spaces
+    never bleed into each other through cache eviction, the staging
+    buffer, SSD compaction, or the fixed-width row prefix."""
+    specs = {
+        "a": TableSpec("a", RowSchema.with_adagrad(3)),  # width 6
+        "b": TableSpec("b", RowSchema.with_slots(5, m=2)),  # width 7
+    }
+    # tiny cache forces eviction churn through both key spaces
+    cluster = Cluster(2, str(tmp_path / "ps"), dim=7, cache_capacity=64,
+                      file_capacity=16)
+    client = PSClient(cluster, list(specs.values()))
+    # registration auto-assigns table ids — use the registered specs
+    specs = {name: client.table(name) for name in specs}
+    scale = cluster.init_scale
+    ref: dict = {}
+    rng = np.random.default_rng(0)
+    for rnd in range(12):
+        for name, spec in specs.items():
+            raw = rng.integers(0, 200, size=40).astype(np.uint64)
+            with client.session(name, raw) as s:
+                uniq = s.raw_keys
+                width = spec.schema.width
+                rows = np.concatenate([s.params, s.opt_state], axis=1)
+                np.testing.assert_array_equal(
+                    rows, _dict_model_pull(ref, spec, uniq, scale),
+                    err_msg=f"round {rnd} table {name}: pulled rows diverged",
+                )
+                new = _update(rows, salt=rnd + (0.5 if name == "b" else 0.0))
+                s.commit(new[:, : spec.schema.emb_dim], new[:, spec.schema.emb_dim :])
+                for k, row in zip(uniq.tolist(), new):
+                    ref[(name, int(k))] = row
+    # final state: every key of both tables, straight off the flushed SSD
+    cluster.flush_all()
+    for name, spec in specs.items():
+        raw = np.arange(200, dtype=np.uint64)
+        pulled = cluster.pull(spec.namespace(raw), pin=False)
+        want = _dict_model_pull(ref, spec, raw, scale)
+        np.testing.assert_array_equal(pulled[:, : spec.schema.width], want)
+        # the row tail beyond the schema width stays zero (prefix design)
+        assert not pulled[:, spec.schema.width :].any()
+    assert cluster.total_pins() == 0
+    assert client.n_inflight() == 0
+
+
+def test_cohosted_table_rows_bit_identical_to_solo_run(tmp_path):
+    """A table's rows must be bitwise independent of its neighbours: the
+    same update stream on table "b" produces identical rows whether "b"
+    shares the cluster with a chatty table "a" or runs alone (given the
+    same table_id, i.e. the same key namespace)."""
+    spec_b = TableSpec("b", RowSchema.with_adagrad(4), table_id=2)
+
+    def run(with_neighbour: bool):
+        tables = [spec_b] + (
+            [TableSpec("a", RowSchema.with_slots(6, m=6, v=2), table_id=1)]
+            if with_neighbour else []
+        )
+        dim = 14 if with_neighbour else 8
+        cl = Cluster(2, str(tmp_path / f"ps{with_neighbour}"), dim=dim,
+                     cache_capacity=48, file_capacity=16)
+        client = PSClient(cl, tables)
+        rng = np.random.default_rng(7)  # table b's stream: identical in both runs
+        rng_noise = np.random.default_rng(8)
+        for rnd in range(10):
+            raw = rng.integers(0, 150, size=32).astype(np.uint64)
+            with client.session("b", raw) as s:
+                new = _update(np.concatenate([s.params, s.opt_state], axis=1), rnd)
+                s.commit(new[:, :4], new[:, 4:])
+            if with_neighbour:  # neighbour churns the shared cache
+                noise = rng_noise.integers(0, 500, size=64).astype(np.uint64)
+                with client.session("a", noise) as sa:
+                    sa.commit(np.ones((sa.n_working, 6), np.float32),
+                              np.zeros((sa.n_working, 8), np.float32))
+        cl.flush_all()
+        rows = cl.pull(spec_b.namespace(np.arange(150, dtype=np.uint64)), pin=False)
+        return rows[:, : spec_b.schema.width]
+
+    np.testing.assert_array_equal(run(True), run(False))
+
+
+# ------------------------------------------------------ session semantics
+
+
+@pytest.fixture
+def client(tmp_path):
+    cluster = Cluster(2, str(tmp_path / "ps"), dim=8, cache_capacity=256,
+                      file_capacity=32)
+    return PSClient(cluster, [TableSpec("t", RowSchema.with_adagrad(4))])
+
+
+def _keys(*ids):
+    return np.array(ids, dtype=np.uint64)
+
+
+def test_session_double_commit_rejected(client):
+    s = client.session("t", _keys(1, 2, 3))
+    s.commit(np.zeros((3, 4), np.float32), np.zeros((3, 4), np.float32))
+    with pytest.raises(SessionStateError):
+        s.commit(np.ones((3, 4), np.float32))
+    with pytest.raises(SessionStateError):
+        s.abort()  # committed sessions cannot be aborted either
+    assert client.cluster.total_pins() == 0
+
+
+def test_session_abort_then_commit_rejected(client):
+    s = client.session("t", _keys(1, 2))
+    s.abort()
+    with pytest.raises(SessionStateError):
+        s.commit(np.zeros((2, 4), np.float32))
+    with pytest.raises(SessionStateError):
+        s.abort()
+    assert client.cluster.total_pins() == 0
+    assert client.n_inflight() == 0
+
+
+def test_session_context_exit_without_commit_aborts(client):
+    with client.session("t", _keys(1, 2, 3)) as s:
+        assert client.cluster.total_pins() == 3
+    assert s.state == "aborted"
+    assert client.cluster.total_pins() == 0
+    assert client.n_inflight() == 0
+
+
+def test_session_context_exception_aborts_and_propagates(client):
+    with pytest.raises(RuntimeError, match="boom"):
+        with client.session("t", _keys(5, 6)) as s:
+            raise RuntimeError("boom")
+    assert s.state == "aborted"
+    assert client.cluster.total_pins() == 0
+
+
+def test_read_only_session_pulls_without_pin(client):
+    with client.session("t", _keys(1, 2, 3)) as s:
+        s.commit(np.full((3, 4), 2.0, np.float32), np.full((3, 4), 3.0, np.float32))
+    with client.session("t", _keys(1, 2, 3), read_only=True) as r:
+        np.testing.assert_array_equal(r.params, np.full((3, 4), 2.0))
+        np.testing.assert_array_equal(r.field("adagrad"), np.full((3, 4), 3.0))
+        assert client.cluster.total_pins() == 0  # no pin taken at all
+        assert client.n_inflight() == 0  # never enters the registry
+        with pytest.raises(SessionStateError):
+            r.commit(np.zeros((3, 4), np.float32))
+    assert r.state == "aborted"
+
+
+def test_session_field_views(client):
+    s = client.session("t", _keys(9))
+    assert s.field("emb").shape == (1, 4)
+    assert s.field("adagrad").shape == (1, 4)
+    np.testing.assert_array_equal(s.field("emb"), s.params)
+    s.abort()
+
+
+# ----------------------------------------------------- manifest / restore
+
+
+def test_cluster_manifest_restores_tables_and_init(tmp_path):
+    spec = TableSpec("emb6", RowSchema.embedding(6), table_id=3, init_scale=0.5)
+    cluster = Cluster(2, str(tmp_path / "ps"), dim=8, cache_capacity=64,
+                      file_capacity=16, tables=TableRegistry([spec]))
+    client = PSClient(cluster)
+    with client.session("emb6", _keys(1, 2)) as s:
+        s.commit(np.full((2, 6), 7.0, np.float32))
+    m = client.manifest()
+    restored = Cluster.restore(m, cluster.base_dir)
+    c2 = PSClient(restored)
+    assert c2.table_names == ["emb6"]
+    assert c2.table("emb6") == spec
+    with c2.session("emb6", _keys(1, 2), read_only=True) as r:
+        np.testing.assert_array_equal(r.params, np.full((2, 6), 7.0))
+    # unseen keys on the restored cluster still use the table's own init
+    with c2.session("emb6", _keys(100, 101), read_only=True) as r:
+        want = deterministic_init(spec.namespace(_keys(100, 101)), 6, 0.5)
+        np.testing.assert_array_equal(r.params, want)
+
+
+def test_client_over_wider_cluster_keeps_narrow_table_exact(tmp_path):
+    """Width-asymmetry regression: a schema narrower than the cluster row
+    must round-trip exactly through prepare/commit (prefix write, zero
+    tail), including the conflict-forwarding path."""
+    spec = TableSpec("n", RowSchema.with_adagrad(2))  # width 4 on dim-12 rows
+    cluster = Cluster(1, str(tmp_path / "ps"), dim=12, cache_capacity=64,
+                      file_capacity=16)
+    client = PSClient(cluster, [spec])
+    blocker = client.session("n", _keys(99))  # untrained: holds push order
+    s1 = client.session("n", _keys(1, 2, 3))
+    s1.commit(np.full((3, 2), 5.0, np.float32), np.full((3, 2), 6.0, np.float32),
+              defer=True)  # trained, but its push is queued behind blocker
+    # successor conflicts on keys 2,3 -> version-forwarded from s1's commit
+    s2 = client.session("n", _keys(2, 3, 4))
+    np.testing.assert_array_equal(s2.params[:2], np.full((2, 2), 5.0))
+    np.testing.assert_array_equal(s2.opt_state[:2], np.full((2, 2), 6.0))
+    assert client.engine("n").stats.rows_forwarded == 2
+    blocker.abort()
+    s2.commit(np.full((3, 2), 8.0, np.float32), np.full((3, 2), 9.0, np.float32))
+    cluster.flush_all()
+    rows = cluster.pull(_keys(1, 2, 3, 4), pin=False)
+    np.testing.assert_array_equal(rows[0, :4], [5.0, 5.0, 6.0, 6.0])
+    np.testing.assert_array_equal(rows[1:, :2], np.full((3, 2), 8.0))
+    np.testing.assert_array_equal(rows[1:, 2:4], np.full((3, 2), 9.0))
+    assert not rows[:, 4:].any()  # tail beyond the schema width stays zero
+    assert cluster.total_pins() == 0
+    assert client.n_inflight() == 0
