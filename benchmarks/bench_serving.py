@@ -1,0 +1,180 @@
+"""Serving-path bench: QPS + lookup latency through the ServingEngine.
+
+Compares, on one published snapshot with a zipf-skewed request stream:
+
+  (a) **baseline** — the PR-3 serving surface: one read-only ``BatchSession``
+      per request (fresh session object, MEM-PS pull path, no serving
+      cache). Its MEM-PS is deliberately sized DRAM-resident, so this is a
+      *warm* baseline — the headline speedup is not an SSD-vs-DRAM trick.
+  (b) **engine (hot)** — ``ServingEngine.lookup`` with the version-keyed
+      hot-row cache warm: the request's rows come out of the serving cache
+      with no cluster/session machinery per request.
+  (c) **engine (coalesced)** — 8 request streams merged per
+      ``lookup_many`` call: one deduped pull serves all streams.
+
+Noise protocol (see BENCH_pipeline / memory: single-shot ratios swing
+wildly in this container): each (baseline, hot) pair is timed in
+**alternation** ``repeats`` times and the speedup is best-vs-best, which is
+symmetric under noise. Latency percentiles come from the best rep's
+per-request times.
+
+Bytes-on-wire are measured separately with cache and MEM-PS out of the
+picture (cold pulls on a fresh NIC model), f32 vs int8 wire.
+
+Counters come from ``engine.counters`` (metrics.Counters) — the same
+source tests assert on. Results land in ``BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit, note
+from repro.core.client import PSClient
+from repro.core.node import Cluster, NetworkModel
+from repro.core.tables import RowSchema, TableSpec
+from repro.serve import ServingCluster, ServingEngine, SnapshotPublisher
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+DIM = 32
+TABLE = "ads"
+
+
+def _requests(rng, n_keys: int, n_requests: int, batch: int) -> list[np.ndarray]:
+    z = rng.zipf(1.1, size=(n_requests, batch))
+    return list(((z - 1) % n_keys).astype(np.uint64))
+
+
+def _time_pass(fn, requests) -> tuple[float, np.ndarray]:
+    """(total seconds, per-request seconds) for one pass over the stream."""
+    lat = np.empty(len(requests))
+    t0 = time.perf_counter()
+    for i, q in enumerate(requests):
+        t1 = time.perf_counter()
+        fn(q)
+        lat[i] = time.perf_counter() - t1
+    return time.perf_counter() - t0, lat
+
+
+def main() -> None:
+    note("serving: ServingEngine (hot cache, coalescing) vs per-request sessions")
+    n_keys = 20_000 if QUICK else 100_000
+    batch = 512
+    n_requests = 48 if QUICK else 200
+    repeats = 3 if QUICK else 5
+    results: dict = {"quick": QUICK, "n_keys": n_keys, "batch": batch,
+                     "n_requests": n_requests, "repeats": repeats}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cluster = Cluster(2, f"{tmp}/train", dim=DIM,
+                          cache_capacity=2 * n_keys, file_capacity=4096)
+        client = PSClient(cluster, [TableSpec(TABLE, RowSchema.embedding(DIM))])
+        rng = np.random.default_rng(0)
+        all_keys = np.arange(n_keys, dtype=np.uint64)
+        cluster.push(all_keys, rng.normal(size=(n_keys, DIM)).astype(np.float32),
+                     unpin=False)
+        publisher = SnapshotPublisher(cluster, f"{tmp}/snap")
+        publisher.publish()
+        requests = _requests(rng, n_keys, n_requests, batch)
+
+        def baseline(q):
+            with client.session(TABLE, q, read_only=True) as s:
+                return s.params
+
+        engine = client.serving_view(snapshots=publisher, cache_rows=2 * n_keys)
+
+        def hot(q):
+            return engine.lookup(TABLE, q)
+
+        # warm both paths (baseline's MEM-PS + the engine's hot cache)
+        _time_pass(baseline, requests)
+        _time_pass(hot, requests)
+
+        # alternating best-of repeats (bench-noise protocol)
+        best_base = best_hot = float("inf")
+        lat_hot = None
+        ratios = []
+        for _ in range(repeats):
+            t_b, _ = _time_pass(baseline, requests)
+            t_h, lat = _time_pass(hot, requests)
+            ratios.append(t_b / t_h)
+            best_base = min(best_base, t_b)
+            if t_h < best_hot:
+                best_hot, lat_hot = t_h, lat
+        speedup = best_base / best_hot
+        c = engine.counters.snapshot()
+        hit_rate = c["hot_hits"] / max(1, c["hot_hits"] + c["hot_misses"])
+        emit("serving.session_baseline", best_base / n_requests * 1e6,
+             f"qps={n_requests / best_base:.0f}")
+        emit("serving.engine_hot", best_hot / n_requests * 1e6,
+             f"qps={n_requests / best_hot:.0f};speedup_vs_sessions={speedup:.2f}x"
+             f";ratios={'/'.join(f'{r:.2f}' for r in ratios)}")
+        emit("serving.latency", float(np.percentile(lat_hot, 50)) * 1e6,
+             f"p99_us={np.percentile(lat_hot, 99) * 1e6:.1f};hit_rate={hit_rate:.3f}")
+        results["session_baseline"] = {
+            "us_per_request": best_base / n_requests * 1e6,
+            "qps": n_requests / best_base,
+        }
+        results["engine_hot"] = {
+            "us_per_request": best_hot / n_requests * 1e6,
+            "qps": n_requests / best_hot,
+            "p50_us": float(np.percentile(lat_hot, 50)) * 1e6,
+            "p99_us": float(np.percentile(lat_hot, 99)) * 1e6,
+            "speedup_vs_sessions": speedup,
+            "speedup_ratios": ratios,
+            "hot_hit_rate": hit_rate,
+        }
+
+        # coalesced multi-stream: 8 streams per merged call
+        n_streams = 8
+        groups = [requests[i : i + n_streams]
+                  for i in range(0, len(requests) - n_streams + 1, n_streams)]
+        engine.lookup_many([(TABLE, q) for q in groups[0]])  # warm
+        best_co = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for g in groups:
+                engine.lookup_many([(TABLE, q) for q in g])
+            best_co = min(best_co, time.perf_counter() - t0)
+        n_served = len(groups) * n_streams
+        emit("serving.engine_coalesced", best_co / n_served * 1e6,
+             f"qps={n_served / best_co:.0f};streams={n_streams}")
+        results["engine_coalesced"] = {
+            "us_per_request": best_co / n_served * 1e6,
+            "qps": n_served / best_co,
+            "streams_per_merge": n_streams,
+        }
+
+        # bytes on wire: cold pulls, fresh NIC, f32 vs int8 (no cache/MEM-PS)
+        wire = {}
+        for tag, quant in (("f32", False), ("int8", True)):
+            net = NetworkModel(wire_quantize=quant)
+            cold = ServingEngine(
+                ServingCluster(publisher.dir, network=net), cache_rows=0
+            )
+            for q in requests[:8]:
+                cold.lookup(TABLE, q)
+            wire[tag] = {"bytes_moved": net.bytes_moved,
+                         "quantize_bytes_saved": net.quantize_bytes_saved}
+        saved = 1 - wire["int8"]["bytes_moved"] / max(1, wire["f32"]["bytes_moved"])
+        emit("serving.wire_bytes", wire["f32"]["bytes_moved"],
+             f"int8_bytes={wire['int8']['bytes_moved']};saved_frac={saved:.2f}")
+        results["wire"] = wire
+        # final snapshot, AFTER the coalesced phase, so the recorded
+        # coalesced_requests reflect the bench that sits next to it
+        results["counters"] = engine.counters.snapshot()
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    note(f"recorded -> {os.path.normpath(BENCH_JSON)}")
+
+
+if __name__ == "__main__":
+    main()

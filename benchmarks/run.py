@@ -3,11 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
 Set BENCH_QUICK=1 for a fast pass.
 
-``--smoke`` runs the MEM-PS hot-path bench, the pipeline-overlap bench and
-the multi-table session bench in quick mode (a few minutes) and refreshes
-``BENCH_mem_ps.json`` + ``BENCH_pipeline.json`` — the regression gates for
-PRs that touch the host hierarchy's batch path, the pipeline/overlap path,
-or the client session layer.
+``--smoke`` runs the MEM-PS hot-path bench, the pipeline-overlap bench, the
+multi-table session bench and the serving bench in quick mode (a few
+minutes) and refreshes ``BENCH_mem_ps.json`` + ``BENCH_pipeline.json`` +
+``BENCH_serving.json`` — the regression gates for PRs that touch the host
+hierarchy's batch path, the pipeline/overlap path, the client session
+layer, or the serving subsystem.
 """
 
 from __future__ import annotations
@@ -24,6 +25,7 @@ MODULES = [
     "benchmarks.bench_hbm_ps",  # Fig 4a
     "benchmarks.bench_mem_ps",  # Fig 4b + perf trajectory
     "benchmarks.bench_multi_table",  # multi-table client sessions
+    "benchmarks.bench_serving",  # serving engine QPS/latency + wire bytes
     "benchmarks.bench_cache",  # Fig 4c
     "benchmarks.bench_ssd",  # Fig 5a
     "benchmarks.bench_scalability",  # Fig 5b
@@ -34,6 +36,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_mem_ps",
     "benchmarks.bench_pipeline_speedup",
     "benchmarks.bench_multi_table",
+    "benchmarks.bench_serving",
 ]
 
 

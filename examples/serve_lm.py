@@ -1,13 +1,27 @@
 """Serve a small LM with batched requests: prefill + greedy decode.
 
-Demonstrates the serving substrate with the paper's technique live on the
-input side: each request batch's unique token ids are pulled from the PS
-cluster through a **read-only session** (no MEM-PS pins, no in-flight
-registry — a decode loop must never accumulate pin pressure); decode steps
-look up new tokens against fresh 1-row-per-seq sessions (hot rows come
-from the MEM-PS cache). ``--wire-quantize`` opts remote reads into the
-int8 row-sparse wire format (serving reads tolerate quantization;
-training pulls always stay exact).
+Serving subsystem walkthrough (DESIGN.md §7)
+--------------------------------------------
+This example runs the full train->serve handoff on one host:
+
+1. **Publish** — the trainer-side cluster publishes a versioned snapshot
+   (``SnapshotPublisher``): because the SSD-PS is log-structured, publishing
+   just writes a manifest and repoints — no copy of the table — and the
+   referenced parameter files are retained against compaction.
+2. **Open read-only** — ``client.serving_view(snapshots=...)`` builds a
+   ``ServingEngine`` over the published version: a version-keyed hot-row
+   cache in DRAM, plus a ``DeviceHotSet`` that keeps the hottest token
+   embeddings device-resident across decode steps (only the delta rows
+   cross the host->device link).
+3. **Decode** — each decode step is ONE ``engine.lookup_device`` call for
+   the whole request batch (the old per-sequence ``BatchSession``-per-step
+   pattern is gone); concurrent request streams would coalesce through
+   ``engine.lookup``/``lookup_many`` into shared deduped pulls.
+
+``--wire-quantize`` opts remote shard reads into the int8 row-sparse wire
+format (serving reads tolerate quantization; training pulls stay exact).
+Serving counters (lookups, hot hits, device reuse, version rolls) come from
+``engine.counters`` — the same source the serving bench and tests assert on.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--new-tokens 32]
 """
@@ -26,6 +40,7 @@ from repro.core.node import Cluster, NetworkModel
 from repro.core.tables import RowSchema, TableSpec
 from repro.models import transformer as T
 from repro.models.attention import KVCache
+from repro.serve import SnapshotPublisher
 from repro.serve.serve_step import greedy_sample
 
 
@@ -47,21 +62,29 @@ def main():
     max_len = args.prompt_len + args.new_tokens
 
     tmp = tempfile.mkdtemp(prefix="hps_serve_")
-    cluster = Cluster(2, tmp, dim=cfg.d_model, cache_capacity=4096,
-                      file_capacity=256, init_scale=0.02,
-                      network=NetworkModel(wire_quantize=args.wire_quantize))
+    cluster = Cluster(2, f"{tmp}/train", dim=cfg.d_model, cache_capacity=4096,
+                      file_capacity=256, init_scale=0.02)
     # serving table: embedding only, no optimizer slots in the row
     client = PSClient(cluster, [TableSpec("tok_emb", RowSchema.embedding(cfg.d_model))])
+
+    # --- train->serve handoff: publish a version, open it read-only
+    publisher = SnapshotPublisher(cluster, f"{tmp}/snapshots")
+    version = publisher.publish()
+    engine = client.serving_view(
+        snapshots=publisher,
+        network=NetworkModel(wire_quantize=args.wire_quantize),
+        cache_rows=4096, device_hot_rows=1024,
+    )
 
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)
     ).astype(np.uint64)
 
-    # --- prefill: read-only session over the prompt's working set
+    # --- prefill: one engine lookup for the whole prompt working set
     prefill = jax.jit(lambda p, t, wt: T.prefill(cfg, p, t, working_table=wt))
     t0 = time.perf_counter()
-    with client.session("tok_emb", prompts, read_only=True) as s:
-        logits, cache = prefill(params, jnp.asarray(s.slots), jnp.asarray(s.params))
+    slots, wt = engine.lookup_device("tok_emb", prompts)
+    logits, cache = prefill(params, jnp.asarray(slots), wt)
     pad = max_len - args.prompt_len
     cache = KVCache(
         jnp.pad(cache.k, ((0, 0),) * 3 + ((0, pad), (0, 0))),
@@ -69,8 +92,9 @@ def main():
     )
     t_prefill = time.perf_counter() - t0
 
-    # --- decode loop: each new token is pulled into a fresh 1-row-per-seq
-    # read-only session (hot rows come from the MEM-PS cache, unpinned)
+    # --- decode loop: ONE engine lookup per step for the whole batch; hot
+    # token rows stay device-resident (DeviceHotSet), the rest read through
+    # the version-keyed hot-row cache
     decode = jax.jit(
         lambda p, tok, c, pos, wt: T.decode_step(cfg, p, tok, c, pos, working_table=wt)
     )
@@ -78,23 +102,27 @@ def main():
     tok_ids = np.asarray(greedy_sample(logits)).astype(np.uint64)
     t0 = time.perf_counter()
     for i in range(args.new_tokens):
-        with client.session("tok_emb", tok_ids, read_only=True) as s:
-            logits, cache = decode(
-                params, jnp.asarray(s.slots), cache,
-                jnp.int32(args.prompt_len + i), jnp.asarray(s.params),
-            )
+        slots, wt = engine.lookup_device("tok_emb", tok_ids)
+        logits, cache = decode(
+            params, jnp.asarray(slots), cache,
+            jnp.int32(args.prompt_len + i), wt,
+        )
         tok_ids = np.asarray(greedy_sample(logits)).astype(np.uint64)
         out_tokens.append(tok_ids[:, 0])
     t_decode = time.perf_counter() - t0
 
     tps = args.batch * args.new_tokens / t_decode
+    print(f"serving snapshot v{version} (publish = manifest repoint, no copy)")
     print(f"prefill: {args.batch}x{args.prompt_len} tokens in {t_prefill*1e3:.0f} ms")
     print(f"decode: {args.new_tokens} steps x {args.batch} seqs = {tps:,.0f} tok/s")
-    hits = sum(n.mem.stats.hits for n in cluster.nodes)
-    misses = sum(n.mem.stats.misses for n in cluster.nodes)
-    print(f"PS hit rate across decode pulls: {hits/(hits+misses):.1%}")
+    c = engine.counters.snapshot()
+    hot = c["hot_hits"] / max(1, c["hot_hits"] + c["hot_misses"])
+    dev = engine.device_hot_stats("tok_emb")
+    print(f"hot-row cache hit rate: {hot:.1%} over {c['lookups']} lookups")
+    print(f"device-resident reuse: {dev.device_hit_rate:.1%} "
+          f"({dev.bytes_saved/2**10:.0f} KiB host->device saved)")
     if args.wire_quantize:
-        net = cluster.network
+        net = engine.source.network
         print(f"wire-quantized replies: {net.quantized_messages} "
               f"({net.quantize_bytes_saved/2**10:.0f} KiB saved on the NIC)")
     print("sampled:", np.stack(out_tokens, axis=1)[0][:16], "...")

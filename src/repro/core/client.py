@@ -28,11 +28,14 @@ Session flavours:
   ``defer=True`` from a pipeline's train stage to deposit only, letting
   the pull/push stage thread apply the push); ``abort()`` unpins without
   updating. Exiting a ``with`` block without committing aborts.
-* **read-only** (``read_only=True``) — the serving path: pulls *without*
-  pins and never touches the in-flight registry, so decode loops cannot
-  accumulate pin pressure; ``commit`` is an error. With
+* **read-only** (``read_only=True``) — ad-hoc single-shot reads: pulls
+  *without* pins and never touches the in-flight registry, so decode loops
+  cannot accumulate pin pressure; ``commit`` is an error. With
   ``NetworkModel(wire_quantize=True)`` these reads travel the int8 wire
-  format.
+  format. The first-class serving path is :meth:`PSClient.serving_view`
+  (DESIGN.md §7): a request-coalescing
+  :class:`~repro.serve.engine.ServingEngine` with a version-keyed hot-row
+  cache over published snapshots.
 """
 
 from __future__ import annotations
@@ -251,15 +254,58 @@ class PSClient:
         requester: int = 0,
     ) -> BatchSession:
         """Open a batch session on ``table`` for the given raw keys."""
+        spec = self.registry.require(table)
         return BatchSession(
             self._engines[table],
-            self.registry.get(table),
+            spec,
             batch_keys,
             batch_id=batch_id,
             device_resident_prev=device_resident_prev,
             read_only=read_only,
             requester=requester,
         )
+
+    # ------------------------------------------------------------- serving
+    def serving_view(
+        self,
+        version: int | None = None,
+        *,
+        snapshots=None,
+        network=None,
+        **engine_kw,
+    ) -> "ServingEngine":
+        """The serving entry point (DESIGN.md §7): a request-coalescing
+        :class:`~repro.serve.engine.ServingEngine` over this client's tables.
+
+        With ``snapshots`` (a :class:`~repro.serve.snapshot.SnapshotPublisher`
+        or a snapshot directory) the engine opens the published ``version``
+        (default: latest) **read-only** — the production train->serve
+        handoff, isolated from ongoing training and atomically
+        roll-forwardable. Without it the engine serves pin-free straight off
+        the live cluster (demos, tests). ``network`` configures the
+        serving-side NIC model (e.g. ``NetworkModel(wire_quantize=True)``
+        for int8 remote reads); remaining kwargs reach the engine
+        (``cache_rows``, ``device_hot_rows``, ``coalesce_window_s``).
+        """
+        from repro.serve.engine import LiveClusterView, ServingEngine
+        from repro.serve.snapshot import ServingCluster
+
+        if snapshots is not None:
+            directory = getattr(snapshots, "dir", snapshots)
+            source = ServingCluster(directory, version=version, network=network)
+        else:
+            if version is not None:
+                raise ValueError(
+                    "pinning a published version needs `snapshots=`; the live "
+                    "cluster view is unversioned"
+                )
+            if network is not None:
+                raise ValueError(
+                    "the live view reads over the cluster's own NetworkModel; "
+                    "`network=` only configures a snapshot ServingCluster"
+                )
+            source = LiveClusterView(self.cluster)
+        return ServingEngine(source, **engine_kw)
 
     # ----------------------------------------------------------- lifecycle
     def apply_ready_pushes(self) -> int:

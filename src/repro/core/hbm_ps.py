@@ -32,6 +32,13 @@ batch stay device-resident and are *slot-remapped* (a device gather), so the
 host only transfers the delta rows. On skewed (zipfian) CTR streams adjacent
 batches share most of their hot keys, making this the dominant PCIe/host
 traffic win.
+
+:class:`DeviceHotSet` generalizes the same mechanism to the *serving* path
+(DESIGN.md §7): instead of "previous batch only", it keeps a
+frequency-ranked resident set of the hottest rows on device across decode
+steps. Because serving rows are immutable within a snapshot version, any
+device-resident copy equals the host copy bit-for-bit — residency is keyed
+by version and resets on a roll-forward.
 """
 
 from __future__ import annotations
@@ -230,6 +237,27 @@ def plan_a2a(slots: np.ndarray, n_shards: int) -> tuple[np.ndarray, np.ndarray]:
 # --------------------------------------------------------------------------
 
 
+def assemble_rows(
+    prev_table: jax.Array | None,
+    fresh_rows: jax.Array,
+    reuse_src: np.ndarray,
+    reuse_dst: np.ndarray,
+    fresh_dst: np.ndarray,
+    n_working: int,
+) -> jax.Array:
+    """Build a [n_working, d] device table from already-resident rows plus
+    the freshly-transferred delta: gather of ``prev_table[reuse_src]`` into
+    ``reuse_dst`` + scatter of ``fresh_rows`` into ``fresh_dst``. Pure data
+    movement — bitwise. Shared by the training :class:`DeviceWorkingSet`
+    (previous-batch residency) and the serving :class:`DeviceHotSet`
+    (frequency-ranked residency)."""
+    if len(reuse_src) == 0:
+        return fresh_rows  # fresh_dst is the identity permutation
+    out = jnp.zeros((n_working, fresh_rows.shape[-1]), dtype=fresh_rows.dtype)
+    out = out.at[jnp.asarray(reuse_dst)].set(prev_table[jnp.asarray(reuse_src)])
+    return out.at[jnp.asarray(fresh_dst)].set(fresh_rows)
+
+
 @dataclass
 class ReusePlan:
     """How to assemble one batch's device table from the previous one."""
@@ -317,8 +345,154 @@ class DeviceWorkingSet:
     def assemble(prev_table: jax.Array | None, fresh_rows: jax.Array, plan: ReusePlan) -> jax.Array:
         """Build the [n_working, d] table: device gather of reused rows +
         scatter of the transferred delta. Pure data movement — bitwise."""
-        if plan.n_reused == 0:
-            return fresh_rows  # fresh_dst is the identity permutation
-        out = jnp.zeros((plan.n_working, fresh_rows.shape[-1]), dtype=fresh_rows.dtype)
-        out = out.at[jnp.asarray(plan.reuse_dst)].set(prev_table[jnp.asarray(plan.reuse_src)])
-        return out.at[jnp.asarray(plan.fresh_dst)].set(fresh_rows)
+        return assemble_rows(
+            prev_table, fresh_rows,
+            plan.reuse_src, plan.reuse_dst, plan.fresh_dst, plan.n_working,
+        )
+
+
+# --------------------------------------------------------------------------
+# serving-path device residency: hottest rows stay on device across steps
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class HotPlan:
+    """How to assemble one lookup's device table from the hot resident set."""
+
+    n_working: int
+    version: int
+    keys: np.ndarray  # uint64 — the lookup's sorted unique keys
+    reuse_src: np.ndarray  # int32 — row in the RESIDENT device table
+    reuse_dst: np.ndarray  # int32 — row in the lookup's table (same key)
+    fresh_dst: np.ndarray  # int32 — lookup rows transferred from host
+
+    @property
+    def n_reused(self) -> int:
+        return len(self.reuse_src)
+
+
+@dataclass
+class HotSetStats:
+    steps: int = 0
+    rows_reused: int = 0
+    rows_transferred: int = 0
+    bytes_saved: int = 0  # host->device bytes avoided by residency
+    bytes_transferred: int = 0
+
+    @property
+    def device_hit_rate(self) -> float:
+        return self.rows_reused / max(1, self.rows_reused + self.rows_transferred)
+
+
+class DeviceHotSet:
+    """Keeps the hottest serving rows device-resident across decode steps.
+
+    :class:`DeviceWorkingSet` exploits *adjacency* (training batch i+1
+    shares keys with batch i); serving streams instead revisit a skewed hot
+    set over many steps, so this class ranks keys by visit frequency and
+    keeps the top ``capacity`` resident. Per lookup:
+
+      1. ``plan``      — match the lookup's unique keys against the resident
+                         set (one ``member_sorted`` pass); only the misses
+                         need a host row.
+      2. ``assemble``  — build the lookup's dense [n_working, d] table on
+                         device: gather of resident rows + scatter of the
+                         transferred delta (same primitive as training).
+      3. ``admit``     — fold the lookup's keys into the frequency ranking
+                         and refresh the resident table, sourcing rows from
+                         the just-built lookup table and the old resident
+                         table (both bitwise-correct: a version's rows are
+                         immutable, so every copy of a key's row is equal).
+
+    Residency is **version-keyed**: ``plan`` with a different snapshot
+    version resets the set, so a roll-forward can never serve a stale row.
+    """
+
+    def __init__(self, capacity: int, row_bytes: int):
+        self.capacity = int(capacity)
+        self.row_bytes = int(row_bytes)
+        self.stats = HotSetStats()
+        self._version: int | None = None
+        self._keys: np.ndarray | None = None  # sorted unique resident keys
+        self._freq: np.ndarray | None = None  # int64, aligned with _keys
+        self._table: jax.Array | None = None  # [len(_keys), d] resident rows
+
+    @property
+    def n_resident(self) -> int:
+        return 0 if self._keys is None else len(self._keys)
+
+    def reset(self) -> None:
+        self._version = None
+        self._keys = None
+        self._freq = None
+        self._table = None
+
+    def plan(self, keys: np.ndarray, version: int) -> HotPlan:
+        """keys: sorted unique uint64 of one lookup; version: the snapshot
+        version the caller's rows come from."""
+        if version != self._version:
+            self.reset()
+            self._version = version
+        n = len(keys)
+        self.stats.steps += 1
+        if self._keys is None or len(self._keys) == 0:
+            fresh = np.arange(n, dtype=np.int32)
+            empty = np.empty(0, dtype=np.int32)
+            self.stats.rows_transferred += n
+            self.stats.bytes_transferred += n * self.row_bytes
+            return HotPlan(n, version, keys, empty, empty, fresh)
+        hit, pos = member_sorted(self._keys, keys)
+        reuse_dst = np.nonzero(hit)[0].astype(np.int32)
+        reuse_src = pos[hit].astype(np.int32)
+        fresh_dst = np.nonzero(~hit)[0].astype(np.int32)
+        self.stats.rows_reused += len(reuse_dst)
+        self.stats.rows_transferred += len(fresh_dst)
+        self.stats.bytes_saved += len(reuse_dst) * self.row_bytes
+        self.stats.bytes_transferred += len(fresh_dst) * self.row_bytes
+        return HotPlan(n, version, keys, reuse_src, reuse_dst, fresh_dst)
+
+    def assemble(self, fresh_rows: jax.Array, plan: HotPlan) -> jax.Array:
+        """Lookup table from resident rows + transferred delta (device-side
+        data movement only)."""
+        return assemble_rows(
+            self._table, fresh_rows,
+            plan.reuse_src, plan.reuse_dst, plan.fresh_dst, plan.n_working,
+        )
+
+    def admit(self, batch_table: jax.Array, plan: HotPlan) -> None:
+        """Update the frequency ranking with this lookup and refresh the
+        resident set to the top-``capacity`` keys."""
+        if plan.version != self._version:
+            return  # raced with a reset; next plan() rebuilds
+        keys = plan.keys
+        if self._keys is None or len(self._keys) == 0:
+            cand, freq = keys, np.ones(len(keys), dtype=np.int64)
+        else:
+            cand = np.union1d(self._keys, keys)  # sorted unique
+            m_old, p_old = member_sorted(self._keys, cand)
+            freq = np.where(m_old, self._freq[np.minimum(p_old, len(self._freq) - 1)], 0)
+            m_new, _ = member_sorted(keys, cand)
+            freq = freq + m_new
+        if len(cand) > self.capacity:
+            keep = np.zeros(len(cand), dtype=bool)
+            keep[np.argsort(-freq, kind="stable")[: self.capacity]] = True
+            cand, freq = cand[keep], freq[keep]  # mask keeps the sort order
+        in_batch, pos_b = member_sorted(keys, cand)
+        tbl = jnp.zeros((len(cand), batch_table.shape[-1]), dtype=batch_table.dtype)
+        b_idx = np.nonzero(in_batch)[0]
+        if b_idx.size:
+            tbl = tbl.at[jnp.asarray(b_idx)].set(batch_table[jnp.asarray(pos_b[in_batch])])
+        if self._keys is not None and len(self._keys):
+            rest = ~in_batch
+            if rest.any():
+                m_old, p_old = member_sorted(self._keys, cand[rest])
+                # every kept non-batch key came from the old resident set
+                r_idx = np.nonzero(rest)[0]
+                tbl = tbl.at[jnp.asarray(r_idx)].set(self._table[jnp.asarray(p_old)])
+        self._keys, self._freq, self._table = cand, freq, tbl
+
+    def assemble_and_admit(self, fresh_rows: jax.Array, plan: HotPlan) -> jax.Array:
+        table = self.assemble(fresh_rows, plan)
+        self.admit(table, plan)
+        return table

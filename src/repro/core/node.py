@@ -65,6 +65,23 @@ class NetworkModel:
             time.sleep(dt * self.time_scale)
         return dt
 
+    def reply(self, keys: np.ndarray, vals: np.ndarray, serving: bool) -> np.ndarray:
+        """Account one remote reply and return the rows as the requester
+        sees them: with ``wire_quantize`` on and a *serving-style* read
+        (``serving=True``), the reply crosses the wire int8 row-sparse and
+        the requester gets the decoded (lossy) rows; training replies stay
+        exact f32. One implementation serves both the training cluster's
+        pull and the snapshot ServingCluster's — the Fig-4b byte accounting
+        cannot diverge between them."""
+        if self.wire_quantize and serving:
+            pkt = sparse_encode(keys, vals, quantize=True)
+            self.transfer(pkt.nbytes)
+            self.quantized_messages += 1
+            self.quantize_bytes_saved += max(0, vals.nbytes - pkt.nbytes)
+            return sparse_decode(pkt)[1]
+        self.transfer(vals.nbytes)
+        return vals
+
     def fresh(self) -> "NetworkModel":
         """Same link parameters, zeroed counters (reshard target NIC).
         ``replace`` copies every field by construction — a future parameter
@@ -219,19 +236,11 @@ class Cluster:
             if node_id == requester:
                 self.pull_local_time += elapsed
             else:
-                # request keys out + rows back over the NIC
+                # request keys out + rows back over the NIC; unpinned reads
+                # are serving-style and may ride the int8 wire (pinned
+                # training pulls stay exact)
                 self.network.transfer((hi - lo) * 8)
-                if self.network.wire_quantize and not pin:
-                    # serving-style read: the reply crosses the wire in the
-                    # int8 row-sparse format; the requester sees the decoded
-                    # (lossy) rows. Pinned (training) pulls stay exact.
-                    pkt = sparse_encode(sorted_keys[lo:hi], vals, quantize=True)
-                    self.network.transfer(pkt.nbytes)
-                    self.network.quantized_messages += 1
-                    self.network.quantize_bytes_saved += max(0, vals.nbytes - pkt.nbytes)
-                    vals = sparse_decode(pkt)[1]
-                else:
-                    self.network.transfer(vals.nbytes)
+                vals = self.network.reply(sorted_keys[lo:hi], vals, serving=not pin)
                 self.pull_remote_time += elapsed
             sorted_out[lo:hi] = vals
         out = np.empty_like(sorted_out)
@@ -327,6 +336,29 @@ class Cluster:
             # reshard from a manifest) reconstructs the same named tables
             out["tables"] = self.tables.to_manifest()
         return out
+
+    def publish_manifest(self) -> dict:
+        """Snapshot-publishing manifest (DESIGN.md §7): like :meth:`manifest`
+        but every node's SSD-PS atomically *retains* the files the manifest
+        references (compaction parks instead of deleting them), and the
+        missing-row init parameters ride along so a read-only serving view
+        initializes unseen keys bit-identically to this cluster."""
+        self.flush_all()
+        out = {
+            "n_nodes": self.n_nodes,
+            "dim": self.dim,
+            "init_scale": self.init_scale,
+            "init_cols": self.init_cols,
+            "nodes": {n.node_id: n.ssd.publish_manifest() for n in self.nodes},
+        }
+        if self.tables is not None:
+            out["tables"] = self.tables.to_manifest()
+        return out
+
+    def release_files(self, per_node: "dict[int, list[str]]") -> None:
+        """Retire one published version's retention references."""
+        for nid, paths in per_node.items():
+            self.nodes[int(nid)].ssd.release_files(paths)
 
     @classmethod
     def restore(cls, manifest: dict, base_dir: str, **kw) -> "Cluster":

@@ -12,6 +12,14 @@ Design points taken directly from the paper / Appendix E:
   reads needed). A background/regular **compaction** merges files whose stale
   fraction exceeds 50%, which bounds total disk usage at <= 2x live bytes
   (1/0.5), plus one in-flight write batch.
+* The same never-in-place property makes **snapshot publishing repointing,
+  not copying** (DESIGN.md §7): :meth:`publish_manifest` captures the
+  key->file map and takes a per-file *retention reference* on every file it
+  mentions. Compaction still merges retained files, but parks their paths in
+  an orphan set instead of deleting them; :meth:`release_files` drops the
+  references and removes any orphan that reached zero. A published version
+  therefore stays readable for as long as someone holds it, at zero write
+  cost to the trainer.
 * The key->file map lives in memory (a descriptor is a few bytes/key; a node
   only holds its key shard). It is a batched open-addressing ``U64Index``
   (DESIGN.md §5) storing ``file_id * file_capacity + row_in_file`` packed in
@@ -107,6 +115,10 @@ class SSDParameterServer:
         self.files: dict[int, FileMeta] = {}
         # key -> file_id * file_capacity + row_in_file (packed int64)
         self.index = U64Index(4 * self.file_capacity)
+        # snapshot retention: path -> live reference count, plus the paths
+        # compaction already dropped from `files` but must keep on disk
+        self._file_refs: dict[str, int] = {}
+        self._orphaned: set[str] = set()
         self.stats = SSDStats()
         self._lock = threading.RLock() if lock else threading.RLock()
 
@@ -242,7 +254,12 @@ class SSDParameterServer:
                     fid = self._write_file(k, v)
                     self.index.set(k, fid * self.file_capacity + np.arange(len(k)))
             for meta in victims:
-                os.remove(meta.path)
+                if self._file_refs.get(meta.path, 0) > 0:
+                    # a published snapshot still points here: park the path
+                    # until every referencing version is released
+                    self._orphaned.add(meta.path)
+                else:
+                    os.remove(meta.path)
                 del self.files[meta.file_id]
             self.stats.compactions += 1
             self.stats.compaction_time += time.perf_counter() - t0
@@ -263,6 +280,62 @@ class SSDParameterServer:
 
     def space_amplification(self) -> float:
         return self.n_disk_rows / max(1, self.n_live_rows)
+
+    # --------------------------------------------------- snapshot retention
+    def publish_manifest(self) -> dict:
+        """Manifest + atomic retention of every file it references.
+
+        Capturing the map and taking the references under one lock hold is
+        what makes publishing safe against a concurrent ``write_batch`` ->
+        auto-``compact`` deleting a just-referenced file. The returned dict
+        adds ``retained_paths`` — the caller (SnapshotPublisher) passes it
+        back to :meth:`release_files` when the version is retired.
+        """
+        with self._lock:
+            m = self.manifest()
+            paths = [meta.path for meta in self.files.values()]
+            for p in paths:
+                self._file_refs[p] = self._file_refs.get(p, 0) + 1
+            m["retained_paths"] = paths
+            return m
+
+    def retain_files(self, paths: "list[str]") -> None:
+        """Re-take retention references on ``paths`` (publisher re-attach
+        after Cluster.restore — refs live in SSD instances, so a restored
+        instance starts with zero and would let compaction delete files a
+        published version still references). Paths the restored manifest no
+        longer lists as active files are parked as orphans so a later
+        release still reclaims them."""
+        with self._lock:
+            active = {m.path for m in self.files.values()}
+            for p in paths:
+                self._file_refs[p] = self._file_refs.get(p, 0) + 1
+                if p not in active and os.path.exists(p):
+                    self._orphaned.add(p)
+
+    def release_files(self, paths: "list[str]") -> None:
+        """Drop one retention reference per path; orphans at zero are
+        deleted from disk (files still live in ``self.files`` just lose
+        the reference and stay)."""
+        with self._lock:
+            for p in paths:
+                n = self._file_refs.get(p, 0) - 1
+                if n > 0:
+                    self._file_refs[p] = n
+                else:
+                    self._file_refs.pop(p, None)
+                    if p in self._orphaned:
+                        self._orphaned.discard(p)
+                        try:
+                            os.remove(p)
+                        except FileNotFoundError:
+                            pass
+
+    @property
+    def n_retained_orphans(self) -> int:
+        """Stale-but-retained files currently parked on disk."""
+        with self._lock:
+            return len(self._orphaned)
 
     # ------------------------------------------------------- checkpointing
     def manifest(self) -> dict:

@@ -211,6 +211,17 @@ class TableRegistry:
     def get(self, name: str) -> TableSpec:
         return self._by_name[name]
 
+    def require(self, name: str) -> TableSpec:
+        """`get` with an error that names the tables that DO exist — the
+        lookup surfaces (sessions, serving engines) route through this so a
+        typo'd table name fails with the menu, not a bare KeyError."""
+        spec = self._by_name.get(name)
+        if spec is None:
+            raise KeyError(
+                f"no table {name!r}; registered tables: {self.names or '(none)'}"
+            )
+        return spec
+
     def by_id(self, table_id: int) -> TableSpec:
         return self._by_id[table_id]
 

@@ -1,8 +1,43 @@
-"""Shared evaluation metrics."""
+"""Shared evaluation metrics and event counters."""
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
+
+
+class Counters:
+    """Named monotonic event counters (thread-safe).
+
+    The serving subsystem reports through one of these (``lookups``,
+    ``coalesced_requests``, ``hot_hits``, ``version_rolls``, ...) so benches
+    and tests assert on counter values instead of scraping ad-hoc prints.
+    Names passed to the constructor are pre-registered at 0 so a
+    ``snapshot()`` always shows the full schema; ``inc`` accepts new names
+    too (they appear once first incremented).
+    """
+
+    def __init__(self, *names: str):
+        self._lock = threading.Lock()
+        self._c: dict[str, int] = {n: 0 for n in names}
+
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._c[name] = self._c.get(name, 0) + int(n)
+
+    def __getitem__(self, name: str) -> int:
+        with self._lock:
+            return self._c.get(name, 0)
+
+    def snapshot(self) -> dict:
+        """A consistent copy of every counter."""
+        with self._lock:
+            return dict(self._c)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._c = {n: 0 for n in self._c}
 
 
 def auc(labels: np.ndarray, scores: np.ndarray) -> float:

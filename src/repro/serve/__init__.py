@@ -1,0 +1,21 @@
+"""Online serving subsystem (DESIGN.md §7).
+
+Train -> serve handoff via versioned snapshots (:mod:`repro.serve.snapshot`),
+a request-coalescing engine with a version-keyed hot-row cache and device
+residency (:mod:`repro.serve.engine`), and the per-family prefill/decode
+step factories (:mod:`repro.serve.serve_step`).
+"""
+
+from repro.serve.engine import (  # noqa: F401
+    COUNTER_NAMES,
+    HotRowCache,
+    LiveClusterView,
+    ServingEngine,
+)
+from repro.serve.snapshot import (  # noqa: F401
+    ServingCluster,
+    ServingVersion,
+    SnapshotPublisher,
+    latest_version,
+    list_versions,
+)

@@ -52,6 +52,24 @@ def _unflatten_into(template, flat, prefix=""):
     return flat[prefix.rstrip("/")]
 
 
+def atomic_write_json(path: str, obj) -> None:
+    """JSON via temp file + ``os.replace`` (atomic on POSIX) with numpy
+    scalars coerced. Shared by checkpoint manifests and the serving
+    snapshot publisher (repro.serve.snapshot)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(_jsonify(obj), f)
+    os.replace(tmp, path)
+
+
+def flip_pointer(path: str, value: str) -> None:
+    """Atomically repoint a one-line pointer file (``latest``/``LATEST``)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(value)
+    os.replace(tmp, path)
+
+
 def save(directory: str, step: int, tree, extra: dict | None = None, ps_manifest: dict | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
@@ -68,11 +86,7 @@ def save(directory: str, step: int, tree, extra: dict | None = None, ps_manifest
     shutil.rmtree(final, ignore_errors=True)
     os.replace(tmp, final)
     # flip the 'latest' pointer last
-    latest = os.path.join(directory, "latest")
-    tmp_link = latest + ".tmp"
-    with open(tmp_link, "w") as f:
-        f.write(os.path.basename(final))
-    os.replace(tmp_link, latest)
+    flip_pointer(os.path.join(directory, "latest"), os.path.basename(final))
     return final
 
 

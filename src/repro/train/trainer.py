@@ -23,6 +23,11 @@ identical loss trajectories and parameter state (tests/test_system.py).
 
 Fault tolerance: periodic async checkpoints persist tower/opt state and the
 PS cluster manifest; ``resume`` restores and continues deterministically.
+
+Serving handoff: with ``publish_every``/``publish_dir`` set, the trainer
+periodically publishes versioned serving snapshots (repro.serve.snapshot)
+at the same consistent cut a checkpoint would capture — serving clusters
+open them read-only and roll forward while training continues.
 """
 
 from __future__ import annotations
@@ -53,6 +58,9 @@ class TrainerConfig:
     tower_lr: float = 1e-3
     checkpoint_every: int = 0  # batches; 0 = off
     checkpoint_dir: str = ""
+    publish_every: int = 0  # batches; 0 = off — versioned serving snapshots
+    publish_dir: str = ""
+    publish_keep: int = 2  # auto-release published versions beyond this many
     queue_capacity: int = 2
     # straggler threshold for the read stage (the paper's HDFS-read
     # stragglers); the stateful stages (pull/push pins rows, transfer
@@ -92,6 +100,17 @@ class CTRTrainer:
         self.ckpt = (
             ckpt.AsyncCheckpointer(tcfg.checkpoint_dir) if tcfg.checkpoint_every else None
         )
+        # versioned serving snapshots (DESIGN.md §7): publishing repoints the
+        # log-structured SSD files behind a manifest — no copy of the table
+        self.publisher = None
+        if tcfg.publish_every or tcfg.publish_dir:
+            if not tcfg.publish_dir:
+                raise ValueError("publish_every requires publish_dir to be set")
+            from repro.serve.snapshot import SnapshotPublisher
+
+            self.publisher = SnapshotPublisher(
+                cluster, tcfg.publish_dir, keep=tcfg.publish_keep
+            )
 
     # ------------------------------------------------------------ stages
     def _stage_pull(self, batch: CTRBatch):
@@ -170,7 +189,21 @@ class CTRTrainer:
                 extra={"losses": self.losses[-16:]},
                 ps_manifest=self.client.manifest(),
             )
+        if (
+            self.publisher
+            and self.tcfg.publish_every
+            and self.batches_done % self.tcfg.publish_every == 0
+        ):
+            self.publish()
         return {"batch_id": batch.batch_id, "loss": loss, "n_working": sess.n_working}
+
+    def publish(self) -> int:
+        """Publish a serving snapshot at a consistent cut: every batch up to
+        and including the last trained one has its deferred push applied and
+        its dirty rows flushed before the version manifest is written."""
+        assert self.publisher is not None, "configure publish_dir/publish_every"
+        self.client.apply_ready_pushes()
+        return self.publisher.publish()
 
     # ------------------------------------------------------------ running
     def build_pipeline(self) -> Pipeline:
@@ -242,6 +275,9 @@ class CTRTrainer:
             # already recorded them (and covers pre-multi-table manifests)
             self.client = PSClient(self.cluster, table_specs(self.cfg))
             self.ps = self.client.engine(self.table)
+            if self.publisher is not None:
+                # re-take live versions' retention refs on the restored SSDs
+                self.publisher.rebind(self.cluster)
         self.dev_ws.reset()
         self._prev_table = self._prev_accum = None
         return step

@@ -1,0 +1,452 @@
+"""Serving subsystem semantics (DESIGN.md §7).
+
+Pins the acceptance contract of the ServingEngine / snapshot stack:
+
+* publishing is repointing (no SSD rewrite) and atomic (LATEST flips last);
+* ServingEngine rows are bit-identical to a direct cluster pull on the
+  cold, hot-cached, coalesced and device paths;
+* version rollover is atomic under in-flight lookups — every request is
+  served from exactly one version;
+* retention keeps a published version readable across compaction, and
+  release reclaims the parked files;
+* serving counters flow through metrics.Counters.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.client import PSClient
+from repro.core.hbm_ps import DeviceHotSet
+from repro.core.node import Cluster, NetworkModel
+from repro.core.tables import RowSchema, TableSpec
+from repro.metrics import Counters
+from repro.serve import (
+    ServingCluster,
+    ServingEngine,
+    SnapshotPublisher,
+    latest_version,
+    list_versions,
+)
+from repro.serve.engine import HotRowCache
+
+DIM = 8
+N_KEYS = 300
+
+
+@pytest.fixture
+def setup(tmp_path):
+    cluster = Cluster(2, str(tmp_path / "train"), dim=DIM,
+                      cache_capacity=1024, file_capacity=64)
+    client = PSClient(cluster, [TableSpec("emb", RowSchema.embedding(DIM))])
+    keys = np.arange(N_KEYS, dtype=np.uint64)
+    rows = np.random.default_rng(0).normal(size=(N_KEYS, DIM)).astype(np.float32)
+    cluster.push(keys, rows, unpin=False)
+    pub = SnapshotPublisher(cluster, str(tmp_path / "snap"))
+    return cluster, client, pub, keys, rows
+
+
+# ------------------------------------------------------------- publishing
+
+
+def test_publish_is_repoint_not_copy(setup):
+    cluster, client, pub, keys, rows = setup
+    cluster.flush_all()
+    written_before = sum(n.ssd.stats.bytes_written for n in cluster.nodes)
+    v = pub.publish()
+    assert v == 1 and latest_version(pub.dir) == 1
+    # no parameter bytes were rewritten: the manifest repoints existing files
+    assert sum(n.ssd.stats.bytes_written for n in cluster.nodes) == written_before
+    v2 = pub.publish()
+    assert list_versions(pub.dir) == [1, 2] and latest_version(pub.dir) == v2
+
+
+def test_publisher_resumes_version_numbering(setup, tmp_path):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    pub.publish()
+    pub2 = SnapshotPublisher(cluster, pub.dir)  # restart
+    assert pub2.publish() == 3
+
+
+def test_release_reaches_versions_of_a_previous_publisher(setup):
+    """A restarted publisher must be able to release versions it did not
+    publish itself (retained paths come from the on-disk manifest), and
+    release must be idempotent — a double release would over-decrement
+    refs shared with still-live versions."""
+    cluster, client, pub, keys, rows = setup
+    v1 = pub.publish()
+    pub2 = SnapshotPublisher(cluster, pub.dir)
+    v2 = pub2.publish()  # shares v1's (unchanged) files -> refs now 2
+    cluster.push(keys, rows * 2, unpin=False)
+    cluster.flush_all()
+    pub2.release(v1)
+    pub2.release(v1)  # idempotent: must not touch v2's shared refs
+    for n in cluster.nodes:
+        n.ssd.compact(force=True)
+    # v2 still readable: its files survived v1's (double) release
+    eng = ServingEngine(ServingCluster(pub.dir, version=v2), cache_rows=0)
+    np.testing.assert_array_equal(eng.lookup("emb", keys[:40]), rows[:40])
+    pub2.release(v2)
+    assert sum(n.ssd.n_retained_orphans for n in cluster.nodes) == 0
+
+
+def test_serving_cluster_requires_a_version(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ServingCluster(str(tmp_path / "empty"))
+
+
+# ------------------------------------------------- bit-identical serving
+
+
+def test_cold_hot_and_coalesced_paths_bit_identical(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    q = np.concatenate([keys[:64], keys[200:240]])
+    direct = cluster.pull(q, pin=False)[:, :DIM]  # the reference rows
+    eng = client.serving_view(snapshots=pub, cache_rows=512)
+
+    cold = eng.lookup("emb", q)
+    np.testing.assert_array_equal(cold, direct)
+    assert eng.counters["hot_hits"] == 0
+
+    hot = eng.lookup("emb", q)  # every row now cache-resident
+    np.testing.assert_array_equal(hot, direct)
+    assert eng.counters["hot_hits"] == len(q)
+
+    # coalesced multi-stream == per-stream, including cross-request dedup
+    streams = [keys[:50], keys[25:75], keys[250:290]]
+    merged = eng.lookup_many([("emb", s) for s in streams])
+    fresh = client.serving_view(snapshots=pub, cache_rows=0)
+    for got, s in zip(merged, streams):
+        np.testing.assert_array_equal(got, fresh.lookup("emb", s))
+    assert eng.counters["coalesced_requests"] >= 3
+
+
+def test_missing_keys_serve_deterministic_init_parity(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    never_written = np.arange(10_000, 10_040, dtype=np.uint64)
+    direct = cluster.pull(never_written, pin=False)[:, :DIM]
+    eng = client.serving_view(snapshots=pub)
+    np.testing.assert_array_equal(eng.lookup("emb", never_written), direct)
+
+
+def test_lookup_preserves_request_shape_and_dedups(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    eng = client.serving_view(snapshots=pub)
+    q = np.array([[5, 7, 5], [7, 5, 2]], dtype=np.uint64)
+    out = eng.lookup("emb", q)
+    assert out.shape == (2, 3, DIM)
+    np.testing.assert_array_equal(out[0, 0], out[0, 2])
+    np.testing.assert_array_equal(out[0, 1], out[1, 0])
+    with pytest.raises(KeyError):
+        eng.lookup("nope", q)
+
+
+def test_wire_quantized_engine_matches_read_only_session(setup):
+    """int8 serving transport: engine rows == the PR-3 read-only session's
+    rows over an identically-quantizing network (both decode the same
+    deterministic packets)."""
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    q = keys[:100]
+    eng = client.serving_view(
+        snapshots=pub, network=NetworkModel(wire_quantize=True), cache_rows=256
+    )
+    got = eng.lookup("emb", q)
+    cluster.network.wire_quantize = True
+    try:
+        with client.session("emb", q, read_only=True) as s:
+            ref = s.params[s.slots]
+    finally:
+        cluster.network.wire_quantize = False
+    np.testing.assert_array_equal(got, ref)
+    # hot path returns the SAME decoded bytes again
+    np.testing.assert_array_equal(eng.lookup("emb", q), got)
+    assert eng.source.network.quantized_messages > 0
+
+
+# ------------------------------------------------------- version rollover
+
+
+def test_rollover_atomic_under_concurrent_lookups(setup):
+    cluster, client, pub, keys, rows = setup
+    v_rows = {}
+    for marker in (1.0, 2.0):
+        cluster.push(keys, np.full((N_KEYS, DIM), marker, np.float32), unpin=False)
+        v_rows[pub.publish()] = marker
+    eng = client.serving_view(snapshots=pub, version=1, cache_rows=512)
+    assert eng.version == 1
+
+    stop = threading.Event()
+    bad: list[str] = []
+    done_iters: list[int] = []
+    rng_seeds = range(4)
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        n = 0
+        try:
+            while not stop.is_set():
+                q = rng.choice(N_KEYS, size=32).astype(np.uint64)
+                out = eng.lookup("emb", q)
+                n += 1
+                vals = np.unique(out)
+                # every row of one request must be from exactly one version
+                if len(vals) != 1 or vals[0] not in (1.0, 2.0):
+                    bad.append(f"mixed versions in one request: {vals[:4]}")
+                    stop.set()
+        except BaseException as e:  # a crash must fail the test, not pass it
+            bad.append(f"worker raised: {e!r}")
+            stop.set()
+        finally:
+            done_iters.append(n)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in rng_seeds]
+    for t in threads:
+        t.start()
+    eng.roll_forward(2)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not bad, bad[0]
+    assert sum(done_iters) > 0, "workers never completed a lookup"
+    assert eng.version == 2 and eng.counters["version_rolls"] == 1
+    # post-roll: the version-keyed cache must not serve v1 rows
+    np.testing.assert_array_equal(
+        eng.lookup("emb", keys[:16]), np.full((16, DIM), 2.0, np.float32)
+    )
+    # rolling to the version already active is a no-op
+    assert eng.roll_forward() == 2 and eng.counters["version_rolls"] == 1
+
+
+def test_retention_survives_compaction_and_release_reclaims(setup):
+    cluster, client, pub, keys, rows = setup
+    v1 = pub.publish()
+    e1 = ServingEngine(ServingCluster(pub.dir, version=v1), cache_rows=0)
+    before = e1.lookup("emb", keys[:80])
+    # supersede every row, then force compaction — v1's files turn stale
+    cluster.push(keys, rows * 3.0, unpin=False)
+    cluster.flush_all()
+    for n in cluster.nodes:
+        n.ssd.compact(force=True)
+    orphans = [n.ssd.n_retained_orphans for n in cluster.nodes]
+    assert sum(orphans) > 0, "compaction should park retained files, not delete"
+    parked = [
+        os.path.join(n.ssd.dir, p) if not os.path.isabs(p) else p
+        for n in cluster.nodes
+        for p in n.ssd._orphaned
+    ]
+    assert all(os.path.exists(p) for p in parked)
+    # v1 still serves its original rows from the parked files
+    np.testing.assert_array_equal(e1.lookup("emb", keys[:80]), before)
+    pub.release(v1)
+    assert sum(n.ssd.n_retained_orphans for n in cluster.nodes) == 0
+    assert not any(os.path.exists(p) for p in parked)
+
+
+def test_retention_survives_cluster_restore(setup, tmp_path):
+    """Retention refs live in the SSD instances; a Cluster.restore starts
+    with zero. publisher.rebind must re-take them or compaction on the
+    restored cluster deletes files published versions still reference."""
+    cluster, client, pub, keys, rows = setup
+    v1 = pub.publish()
+    e1 = ServingEngine(ServingCluster(pub.dir, version=v1), cache_rows=0)
+    before = e1.lookup("emb", keys[:60])
+    manifest = cluster.manifest()
+    restored = Cluster.restore(manifest, cluster.base_dir, **cluster.ctor_kwargs())
+    pub.rebind(restored)
+    restored.push(keys, rows * 7.0, unpin=False)
+    restored.flush_all()
+    for n in restored.nodes:
+        n.ssd.compact(force=True)
+    # v1's files were superseded + compacted on the restored cluster — the
+    # re-taken refs must have parked them, not deleted them
+    np.testing.assert_array_equal(e1.lookup("emb", keys[:60]), before)
+    pub.release(v1)
+    assert sum(n.ssd.n_retained_orphans for n in restored.nodes) == 0
+
+
+def test_publisher_keep_auto_releases_old_versions(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.keep = 2
+    versions = [pub.publish() for _ in range(4)]
+    assert sorted(pub._live) == versions[-2:]  # older refs dropped
+
+
+# ------------------------------------------------------------ live serving
+
+
+def test_live_view_and_manual_invalidation(setup):
+    cluster, client, pub, keys, rows = setup
+    eng = client.serving_view(cache_rows=256)  # no snapshots: live cluster
+    q = keys[:40]
+    np.testing.assert_array_equal(
+        eng.lookup("emb", q), cluster.pull(q, pin=False)[:, :DIM]
+    )
+    cluster.push(q, rows[:40] * 5.0, unpin=False)
+    # cached rows are stale until the caller rolls the serving epoch
+    eng.roll_forward()
+    np.testing.assert_array_equal(eng.lookup("emb", q), rows[:40] * 5.0)
+    assert cluster.total_pins() == 0, "serving must never pin"
+
+
+# ---------------------------------------------------------- device tier
+
+
+def test_lookup_device_matches_host_rows_across_steps(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    eng = client.serving_view(snapshots=pub, cache_rows=512, device_hot_rows=64)
+    rng = np.random.default_rng(1)
+    for step in range(12):
+        q = rng.choice(128, size=(3, 6)).astype(np.uint64)  # heavy reuse
+        slots, tbl = eng.lookup_device("emb", q)
+        got = np.asarray(tbl)[slots]
+        np.testing.assert_array_equal(got, rows[q.reshape(-1)].reshape(3, 6, DIM))
+    st = eng.device_hot_stats("emb")
+    assert st.rows_reused > 0 and eng.counters["device_rows_reused"] == st.rows_reused
+
+
+def test_device_hot_set_version_keyed_reset():
+    dev = DeviceHotSet(capacity=8, row_bytes=16)
+    import jax.numpy as jnp
+
+    keys = np.array([1, 2, 3], dtype=np.uint64)
+    rows = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    plan = dev.plan(keys, version=1)
+    assert plan.n_reused == 0
+    dev.assemble_and_admit(rows, plan)
+    assert dev.plan(keys, version=1).n_reused == 3  # resident now
+    assert dev.plan(keys, version=2).n_reused == 0  # roll resets residency
+
+
+def test_device_hot_set_capacity_keeps_hottest():
+    dev = DeviceHotSet(capacity=2, row_bytes=16)
+    import jax.numpy as jnp
+
+    hot = np.array([1, 2], dtype=np.uint64)
+    rows2 = jnp.ones((2, 4), dtype=jnp.float32)
+    for _ in range(3):  # make keys 1,2 clearly hottest
+        dev.assemble_and_admit(rows2, dev.plan(hot, version=1))
+    cold = np.array([3, 4], dtype=np.uint64)
+    dev.assemble_and_admit(rows2 * 2, dev.plan(cold, version=1))
+    assert dev.n_resident == 2
+    plan = dev.plan(hot, version=1)
+    assert plan.n_reused == 2, "hottest keys must stay resident"
+
+
+# ------------------------------------------------------- hot-row cache
+
+
+def test_hot_row_cache_eviction_and_version_keying():
+    cache = HotRowCache(capacity=4, dim=2)
+    k = np.arange(4, dtype=np.uint64)
+    r = np.arange(8, dtype=np.float32).reshape(4, 2)
+    cache.insert(k, r, version=1)
+    mask, rows = cache.lookup(k, version=1)
+    assert mask.all()
+    np.testing.assert_array_equal(rows, r)
+    # same keys at another version: all misses (staleness-free)
+    mask, _ = cache.lookup(k, version=2)
+    assert not mask.any()
+    # inserting at v2 overwrites in place, then new keys evict the coldest
+    cache.insert(k[:2], r[:2] * 10, version=2)
+    newk = np.array([100, 101], dtype=np.uint64)
+    cache.insert(newk, r[:2], version=2)
+    mask, rows = cache.lookup(np.concatenate([k[:2], newk]), version=2)
+    assert mask.all()
+    np.testing.assert_array_equal(rows[:2], r[:2] * 10)
+    assert len(cache) == 4  # never exceeds capacity
+
+
+def test_cache_smaller_than_working_set_stays_correct(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    eng = client.serving_view(snapshots=pub, cache_rows=32)  # N_KEYS >> 32
+    for lo in (0, 100, 200, 50):
+        q = keys[lo : lo + 90]
+        np.testing.assert_array_equal(eng.lookup("emb", q), rows[lo : lo + 90])
+
+
+# ----------------------------------------------------- coalescing + counters
+
+
+def test_threaded_lookups_coalesce_and_match_per_stream(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    eng = client.serving_view(snapshots=pub, coalesce_window_s=0.05)
+    ref = client.serving_view(snapshots=pub, cache_rows=0)
+    streams = {i: keys[i * 30 : i * 30 + 60] for i in range(5)}
+    outs: dict[int, np.ndarray] = {}
+    barrier = threading.Barrier(len(streams))
+
+    def worker(i):
+        barrier.wait()
+        outs[i] = eng.lookup("emb", streams[i])
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in streams]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i, s in streams.items():
+        np.testing.assert_array_equal(outs[i], ref.lookup("emb", s))
+    c = eng.counters.snapshot()
+    assert c["lookups"] == len(streams)
+    # the point of coalescing: strictly fewer pulls than requests
+    assert c["merged_pulls"] < len(streams)
+
+
+def test_counters_schema_and_metrics_counters():
+    c = Counters("a", "b")
+    assert c.snapshot() == {"a": 0, "b": 0}
+    c.inc("a")
+    c.inc("c", 5)
+    assert c["a"] == 1 and c["c"] == 5
+    c.reset()
+    assert c.snapshot() == {"a": 0, "b": 0, "c": 0}
+
+
+def test_trainer_publishes_versions_during_pipelined_run(tmp_path):
+    """The train->serve handoff: publish_every emits versions mid-run at
+    consistent cuts; a final publish serves rows bit-identical to the
+    trained cluster."""
+    from repro.configs.ctr_models import TINY
+    from repro.data.synthetic_ctr import SyntheticCTRStream
+    from repro.train.trainer import CTRTrainer, TrainerConfig
+
+    cfg = TINY
+    cluster = Cluster(2, str(tmp_path / "ps"), dim=cfg.emb_dim * 2,
+                      cache_capacity=50_000, init_cols=cfg.emb_dim)
+    tr = CTRTrainer(cfg, cluster, TrainerConfig(
+        publish_every=2, publish_dir=str(tmp_path / "snap")))
+    stream = SyntheticCTRStream(cfg.n_sparse_keys, cfg.nnz_per_example,
+                                cfg.n_slots, cfg.batch_size, seed=0)
+    tr.run(stream, 5, pipelined=True)
+    assert latest_version(tr.publisher.dir) == 2  # batches 2 and 4
+    v_final = tr.publish()
+    eng = tr.client.serving_view(snapshots=tr.publisher)
+    assert eng.version == v_final
+    spec = tr.client.table(tr.table)
+    q = np.arange(50, dtype=np.uint64)
+    served = eng.lookup(tr.table, q)
+    direct = cluster.pull(spec.namespace(q), pin=False)[:, : spec.schema.emb_dim]
+    np.testing.assert_array_equal(served, direct)
+    # the mid-run version is a different, still-readable cut
+    old = tr.client.serving_view(version=2, snapshots=tr.publisher)
+    assert not np.array_equal(old.lookup(tr.table, q), served)
+
+
+def test_engine_counters_cover_issue_schema(setup):
+    cluster, client, pub, keys, rows = setup
+    pub.publish()
+    eng = client.serving_view(snapshots=pub)
+    eng.lookup("emb", keys[:10])
+    snap = eng.counters.snapshot()
+    for name in ("lookups", "coalesced_requests", "hot_hits", "version_rolls"):
+        assert name in snap
