@@ -1,0 +1,246 @@
+"""Device train-step μbenchmark: fused embedding-bag vs the seed one-hot path.
+
+Times the jitted CTR device step (Algorithm 1 lines 11-15: k mini-batches of
+fwd/bwd + row-Adagrad over one pulled working set) two ways:
+
+  (a) **onehot** — the seed math: ``[B, nnz, emb]`` gather + dense
+      ``[B, nnz, n_slots]`` one-hot pooled via einsum, autodiff backward,
+      ``adagrad_ref`` row update (exactly the pre-PR-5 production step);
+  (b) **fused**  — the production factories (``make_ctr_train_step`` /
+      ``make_ctr_train_step_grouped``): ``kops.embedding_bag`` forward, the
+      custom VJP backward through ``scatter_add``, rows through
+      ``kops.adagrad_update``.
+
+Both run on the single-table CTR shape and the grouped (hetero multi-table)
+shape. Noise protocol (see BENCH_pipeline / memory: single-shot ratios in
+this container swing wildly): each (onehot, fused) pair is timed in
+**alternation** ``repeats`` times and the headline speedup is best-vs-best.
+
+Results land in ``BENCH_train_step.json`` (CI artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, emit, note
+from repro.configs.ctr_models import CTRConfig, SlotGroup
+from repro.kernels import ref as kref
+from repro.models import ctr as ctr_model
+from repro.train.optim import AdamW
+from repro.train.train_step import make_ctr_train_step, make_ctr_train_step_grouped
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_train_step.json")
+
+
+def _seed_pool(table, slot_ids, slot_of, valid, n_slots):
+    """The seed embed_pool math (one-hot/einsum), flattened like the model."""
+    B = slot_ids.shape[0]
+    return kref.embedding_bag_ref(table, slot_ids, slot_of, valid, n_slots).reshape(B, -1)
+
+
+# the baseline differs ONLY in pooling: tower and loss are the production ones
+_tower = ctr_model._tower_mlp
+_bce = ctr_model._bce_with_logits
+
+
+def make_onehot_ctr_step(cfg, row_lr=0.05, tower_opt=AdamW(lr=1e-3)):
+    """The pre-fusion device step: seed pooling + autodiff + adagrad_ref."""
+
+    def loss(tw, tb, mb):
+        logits = _tower(tw, _seed_pool(tb, mb["slot_ids"], mb["slot_of"], mb["valid"], cfg.n_slots))
+        return _bce(logits, mb["labels"])
+
+    def step(tower, opt_state, working_table, row_accum, minibatches):
+        def one_minibatch(carry, mb):
+            tower, opt_state, table, accum = carry
+            l, grads = jax.value_and_grad(loss, argnums=(0, 1))(tower, table, mb)
+            tower, opt_state = tower_opt.update(grads[0], opt_state, tower)
+            table, accum = kref.adagrad_ref(table, accum, grads[1], row_lr)
+            return (tower, opt_state, table, accum), l
+
+        carry, losses = jax.lax.scan(
+            one_minibatch, (tower, opt_state, working_table, row_accum), minibatches
+        )
+        return carry + ({"loss": jnp.mean(losses)},)
+
+    return step
+
+
+def make_onehot_grouped_step(cfg, row_lr=0.05, tower_opt=AdamW(lr=1e-3)):
+    def loss(tw, tbs, mb):
+        pooled = [
+            _seed_pool(tbs[g.name], mb["inputs"][g.name]["slot_ids"],
+                       mb["inputs"][g.name]["slot_of"], mb["inputs"][g.name]["valid"], g.n_slots)
+            for g in cfg.groups
+        ]
+        return _bce(_tower(tw, jnp.concatenate(pooled, axis=-1)), mb["labels"])
+
+    def step(tower, opt_state, tables, accums, minibatches):
+        def one_minibatch(carry, mb):
+            tower, opt_state, tables, accums = carry
+            l, grads = jax.value_and_grad(loss, argnums=(0, 1))(tower, tables, mb)
+            tower, opt_state = tower_opt.update(grads[0], opt_state, tower)
+            new_t, new_a = {}, {}
+            for name in tables:
+                new_t[name], new_a[name] = kref.adagrad_ref(
+                    tables[name], accums[name], grads[1][name], row_lr
+                )
+            return (tower, opt_state, new_t, new_a), l
+
+        carry, losses = jax.lax.scan(
+            one_minibatch, (tower, opt_state, tables, accums), minibatches
+        )
+        return carry + ({"loss": jnp.mean(losses)},)
+
+    return step
+
+
+def _alternating_best(fn_a, fn_b, repeats, steps):
+    """Best-of wall seconds for each fn, timed in alternation."""
+    best_a = best_b = float("inf")
+    ratios = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            fn_a()
+        t_a = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            fn_b()
+        t_b = time.perf_counter() - t0
+        ratios.append(t_a / t_b)
+        best_a, best_b = min(best_a, t_a), min(best_b, t_b)
+    return best_a / steps, best_b / steps, ratios
+
+
+def _ctr_case(results):
+    # paper model-C structure (Table 3): 500 nnz spread over 128 slots —
+    # the regime where the seed path's dense [B, nnz, n_slots] one-hot and
+    # its pooling matmul dominate the device step
+    cfg = CTRConfig(
+        name="bench-ctr",
+        n_sparse_keys=200_000,
+        nnz_per_example=500,
+        emb_dim=8,
+        n_slots=128,
+        mlp_hidden=(96, 48),
+        batch_size=512 if QUICK else 1024,
+        minibatches_per_batch=2,
+    )
+    B, k = cfg.batch_size, cfg.minibatches_per_batch
+    n_working = min(50_000, B * cfg.nnz_per_example)
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (n_working, cfg.emb_dim))
+    accum = jnp.zeros_like(table)
+    tower = ctr_model.init_tower(cfg, key)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(tower)
+    mb = B // k
+    sl = lambda a: a.reshape((k, mb) + a.shape[1:])
+    minibatches = {
+        "slot_ids": sl(jax.random.randint(key, (B, cfg.nnz_per_example), 0, n_working)),
+        "slot_of": sl(jax.random.randint(jax.random.fold_in(key, 1), (B, cfg.nnz_per_example), 0, cfg.n_slots)),
+        "valid": sl(jnp.ones((B, cfg.nnz_per_example), bool)),
+        "labels": sl(jnp.asarray(np.random.default_rng(0).integers(0, 2, B), jnp.float32)),
+    }
+    fused = jax.jit(make_ctr_train_step(cfg, 0.05, opt))
+    onehot = jax.jit(make_onehot_ctr_step(cfg, 0.05, opt))
+
+    run_fused = lambda: jax.block_until_ready(fused(tower, opt_state, table, accum, minibatches))
+    run_onehot = lambda: jax.block_until_ready(onehot(tower, opt_state, table, accum, minibatches))
+    run_fused(); run_onehot()  # compile + warm
+
+    repeats, steps = (3, 2) if QUICK else (5, 3)
+    t_old, t_new, ratios = _alternating_best(run_onehot, run_fused, repeats, steps)
+    speedup = t_old / t_new
+    emit("train_step.ctr_onehot", t_old * 1e6, f"B={B};nnz={cfg.nnz_per_example};slots={cfg.n_slots}")
+    emit("train_step.ctr_fused", t_new * 1e6,
+         f"speedup={speedup:.2f}x;ratios={'/'.join(f'{r:.2f}' for r in ratios)}")
+    # numeric parity of the two steps (same carry, same losses)
+    l_old = np.asarray(run_onehot()[-1]["loss"])
+    l_new = np.asarray(run_fused()[-1]["loss"])
+    results["ctr"] = {
+        "batch": B, "nnz": cfg.nnz_per_example, "n_slots": cfg.n_slots,
+        "emb": cfg.emb_dim, "minibatches": k, "n_working": n_working,
+        "onehot_us_per_step": t_old * 1e6, "fused_us_per_step": t_new * 1e6,
+        "speedup": speedup, "speedup_ratios": ratios,
+        "loss_onehot": float(l_old), "loss_fused": float(l_new),
+        "loss_abs_diff": abs(float(l_old) - float(l_new)),
+    }
+
+
+def _grouped_case(results):
+    cfg = CTRConfig(
+        name="bench-hetero",
+        n_sparse_keys=100_000,
+        nnz_per_example=256,
+        emb_dim=16,
+        n_slots=192,
+        mlp_hidden=(64, 32),
+        batch_size=256 if QUICK else 512,
+        minibatches_per_batch=2,
+        slot_groups=(SlotGroup("query", 64, 8), SlotGroup("ad", 128, 16)),
+    )
+    B, k = cfg.batch_size, cfg.minibatches_per_batch
+    key = jax.random.PRNGKey(1)
+    nnz = cfg.nnz_per_example
+    mb = B // k
+    sl = lambda a: a.reshape((k, mb) + a.shape[1:])
+    tables, accums, inputs = {}, {}, {}
+    for gi, g in enumerate(cfg.groups):
+        kg = jax.random.fold_in(key, gi)
+        n_working = min(20_000, B * nnz)
+        tables[g.name] = jax.random.normal(kg, (n_working, g.emb_dim))
+        accums[g.name] = jnp.zeros_like(tables[g.name])
+        inputs[g.name] = {
+            "slot_ids": sl(jax.random.randint(kg, (B, nnz), 0, n_working)),
+            "slot_of": sl(jax.random.randint(jax.random.fold_in(kg, 1), (B, nnz), 0, g.n_slots)),
+            "valid": sl(jnp.ones((B, nnz), bool)),
+        }
+    minibatches = {
+        "labels": sl(jnp.asarray(np.random.default_rng(1).integers(0, 2, B), jnp.float32)),
+        "inputs": inputs,
+    }
+    tower = ctr_model.init_tower(cfg, key)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(tower)
+    fused = jax.jit(make_ctr_train_step_grouped(cfg, 0.05, opt))
+    onehot = jax.jit(make_onehot_grouped_step(cfg, 0.05, opt))
+    run_fused = lambda: jax.block_until_ready(fused(tower, opt_state, tables, accums, minibatches))
+    run_onehot = lambda: jax.block_until_ready(onehot(tower, opt_state, tables, accums, minibatches))
+    run_fused(); run_onehot()
+
+    repeats, steps = (3, 2) if QUICK else (5, 3)
+    t_old, t_new, ratios = _alternating_best(run_onehot, run_fused, repeats, steps)
+    speedup = t_old / t_new
+    emit("train_step.grouped_onehot", t_old * 1e6, f"B={B};groups={len(cfg.groups)}")
+    emit("train_step.grouped_fused", t_new * 1e6,
+         f"speedup={speedup:.2f}x;ratios={'/'.join(f'{r:.2f}' for r in ratios)}")
+    results["grouped"] = {
+        "batch": B, "nnz": nnz, "minibatches": k,
+        "groups": {g.name: {"n_slots": g.n_slots, "emb": g.emb_dim} for g in cfg.groups},
+        "onehot_us_per_step": t_old * 1e6, "fused_us_per_step": t_new * 1e6,
+        "speedup": speedup, "speedup_ratios": ratios,
+    }
+
+
+def main() -> None:
+    note("device train step: fused embedding-bag vs seed one-hot/einsum pooling")
+    results: dict = {"quick": QUICK}
+    _ctr_case(results)
+    _grouped_case(results)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    note(f"recorded -> {os.path.normpath(BENCH_JSON)}")
+
+
+if __name__ == "__main__":
+    main()

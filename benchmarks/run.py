@@ -4,11 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
 Set BENCH_QUICK=1 for a fast pass.
 
 ``--smoke`` runs the MEM-PS hot-path bench, the pipeline-overlap bench, the
-multi-table session bench and the serving bench in quick mode (a few
-minutes) and refreshes ``BENCH_mem_ps.json`` + ``BENCH_pipeline.json`` +
-``BENCH_serving.json`` — the regression gates for PRs that touch the host
-hierarchy's batch path, the pipeline/overlap path, the client session
-layer, or the serving subsystem.
+multi-table session bench, the serving bench and the device train-step
+bench in quick mode (a few minutes) and refreshes ``BENCH_mem_ps.json`` +
+``BENCH_pipeline.json`` + ``BENCH_serving.json`` + ``BENCH_train_step.json``
+— the regression gates for PRs that touch the host hierarchy's batch path,
+the pipeline/overlap path, the client session layer, the serving subsystem,
+or the device kernel layer.
 """
 
 from __future__ import annotations
@@ -30,6 +31,7 @@ MODULES = [
     "benchmarks.bench_ssd",  # Fig 5a
     "benchmarks.bench_scalability",  # Fig 5b
     "benchmarks.bench_kernels",  # kernel layer
+    "benchmarks.bench_train_step",  # fused embedding-bag device step
 ]
 
 SMOKE_MODULES = [
@@ -37,6 +39,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_pipeline_speedup",
     "benchmarks.bench_multi_table",
     "benchmarks.bench_serving",
+    "benchmarks.bench_train_step",
 ]
 
 

@@ -70,8 +70,11 @@ class WorkingTable:
         return kops.embedding_lookup(table, slots)
 
     @staticmethod
-    def accumulate(table: jax.Array, slots: jax.Array, values: jax.Array) -> jax.Array:
-        return kops.scatter_add(table, slots, values)
+    def accumulate(
+        table: jax.Array, slots: jax.Array, values: jax.Array,
+        *, assume_sorted: bool = False,
+    ) -> jax.Array:
+        return kops.scatter_add(table, slots, values, assume_sorted=assume_sorted)
 
     @staticmethod
     def insert(table: jax.Array, slots: jax.Array, values: jax.Array) -> jax.Array:
@@ -147,18 +150,27 @@ class ShardedWorkingTable:
         )(table, slots)
 
     # -- accumulate: grads for all B slots -> owned rows only --------------
-    def accumulate(self, table: jax.Array, slots: jax.Array, grads: jax.Array) -> jax.Array:
+    def accumulate(
+        self, table: jax.Array, slots: jax.Array, grads: jax.Array,
+        *, assume_sorted: bool = False,
+    ) -> jax.Array:
         """grads: [B, d] replicated (already summed over data axis);
-        each shard applies its owned rows."""
+        each shard applies its owned rows.
+
+        ``assume_sorted=True`` when ``slots`` is ascending (the MEM-PS emits
+        sorted-unique working sets): every slot maps to local row
+        ``slot // S`` — non-decreasing — so the Pallas scatter kernel skips
+        its argsort. Non-owned entries scatter zero grads into their (valid)
+        ``slot // S`` row, which is harmless and keeps the order sorted."""
         S = self.n_shards
 
         def body(tbl, sl, g):
             me = jax.lax.axis_index(self.axis)
             owned = (sl % S) == me
-            local_row = jnp.where(owned, sl // S, tbl.shape[0] - 1)
             g = jnp.where(owned[:, None], g, 0.0)
-            # rows not owned scatter zeros into the last row: harmless
-            return kops.scatter_add(tbl, local_row.astype(jnp.int32), g)
+            return kops.scatter_add(
+                tbl, (sl // S).astype(jnp.int32), g, assume_sorted=assume_sorted
+            )
 
         return shard_map(
             body,

@@ -7,6 +7,9 @@ portable implementations that lower on any backend with the same math:
 * ``embedding_lookup`` / ``scatter_add`` / ``adagrad_update`` — jnp gather /
   sorted-segment add / fused arithmetic (XLA fuses these well on TPU too;
   the Pallas versions additionally avoid touching non-working rows).
+* ``embedding_bag`` — fused gather + per-(example, slot) sum-pool with a
+  custom VJP (backward goes straight through ``scatter_add``); the portable
+  path is a segment-sum, never the dense one-hot/einsum chain.
 * ``attention`` — ``impl='flash'`` (Pallas kernel, recompute-vjp),
   ``'blockwise'`` (lax.scan streaming softmax: O(S*block) memory, compiles
   everywhere — what the multi-pod dry-run lowers), ``'naive'`` (materializes
@@ -21,7 +24,10 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import ref as _ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.embedding_lookup import embedding_lookup_pallas
 from repro.kernels.fused_adagrad import adagrad_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -56,29 +62,155 @@ def embedding_lookup(table, ids, *, use_pallas: bool | None = None, interpret: b
     return _ref.embedding_lookup_ref(table, ids)
 
 
-def scatter_add(table, ids, grads, *, use_pallas: bool | None = None, interpret: bool | None = None):
+def scatter_add(
+    table, ids, grads, *,
+    assume_sorted: bool = False,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+):
+    """``table[ids[i]] += grads[i]`` with duplicates accumulating.
+
+    The Pallas kernel needs duplicate ids consecutive, so the wrapper sorts
+    by default. Callers whose ids are already sorted (the MEM-PS emits
+    sorted-unique working sets; the embedding-bag VJP sorts once itself)
+    pass ``assume_sorted=True`` to skip the redundant argsort+gathers.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        order = jnp.argsort(ids)  # duplicates must be consecutive for the kernel
+        if not assume_sorted:
+            order = jnp.argsort(ids)  # duplicates must be consecutive for the kernel
+            ids, grads = ids[order], grads[order]
         return scatter_add_pallas(
-            table,
-            ids[order],
-            grads[order],
+            table, ids, grads,
             interpret=not _on_tpu() if interpret is None else interpret,
         )
     return _ref.scatter_add_ref(table, ids, grads)
 
 
 def adagrad_update(params, accum, grads, lr, *, eps: float = 1e-8, use_pallas: bool | None = None, interpret: bool | None = None):
+    """Fused row-Adagrad on the pulled working set.
+
+    Working sets are sized by the batch's unique keys, so their shapes are
+    rarely (8, 128)-tile aligned. The update is purely elementwise, so the
+    wrapper repacks any shape into a lane-aligned [rows, 128] layout (padding
+    strictly less than one (8, 128) tile — NOT naive pad-to-128 columns,
+    which would be a 16x traffic blowup for the paper's emb_dim=8 rows) and
+    every shape takes the fused Pallas path instead of silently falling back
+    to the reference. Zero-padded grads leave padded elements at zero.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas and params.shape[0] % 8 == 0 and params.shape[1] % 128 == 0:
-        return adagrad_pallas(
-            params, accum, grads, lr, eps=eps,
-            interpret=not _on_tpu() if interpret is None else interpret,
+    if not use_pallas:
+        return _ref.adagrad_ref(params, accum, grads, lr, eps)
+    interpret = not _on_tpu() if interpret is None else interpret
+    B, D = params.shape
+    if B % 8 == 0 and D % 128 == 0:
+        return adagrad_pallas(params, accum, grads, lr, eps=eps, interpret=interpret)
+    n = B * D
+    rows = -(-n // 128)
+    rows += -rows % 8
+    pad = rows * 128 - n
+    repack = lambda x: jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, 128)
+    p_new, a_new = adagrad_pallas(
+        repack(params), repack(accum), repack(grads), lr, eps=eps, interpret=interpret
+    )
+    unpack = lambda x: x.reshape(-1)[:n].reshape(B, D)
+    return unpack(p_new), unpack(a_new)
+
+
+# --------------------------------------------------------------------------
+# fused embedding-bag: gather + per-(example, slot) sum-pool, custom VJP
+# --------------------------------------------------------------------------
+
+
+def _embedding_bag_segment(table, slot_ids, slot_of, valid, n_slots):
+    """Portable fallback: flat gather + segment-sum over (example, slot)
+    buckets. No ``[B, nnz, n_slots]`` one-hot, no dense pooling matmul —
+    XLA lowers this to a gather fused into a segment reduction on any
+    backend."""
+    B, nnz = slot_ids.shape
+    # f32 partial sums regardless of table dtype — matches the Pallas
+    # kernel's accumulator so TPU and portable runs pool identically
+    rows = jnp.take(table, slot_ids.reshape(-1), axis=0).astype(jnp.float32)
+    rows = rows * valid.reshape(-1, 1).astype(jnp.float32)
+    seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * n_slots + slot_of).reshape(-1)
+    pooled = jax.ops.segment_sum(rows, seg, num_segments=B * n_slots)
+    return pooled.reshape(B, n_slots, table.shape[1]).astype(table.dtype)
+
+
+def _embedding_bag_impl(table, slot_ids, slot_of, valid, n_slots, use_pallas, interpret):
+    if use_pallas:
+        return embedding_bag_pallas(
+            table, slot_ids, slot_of, valid, n_slots=n_slots, interpret=interpret
         )
-    return _ref.adagrad_ref(params, accum, grads, lr, eps)
+    return _embedding_bag_segment(table, slot_ids, slot_of, valid, n_slots)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _embedding_bag(table, slot_ids, slot_of, valid, n_slots, use_pallas, interpret):
+    return _embedding_bag_impl(table, slot_ids, slot_of, valid, n_slots, use_pallas, interpret)
+
+
+def _embedding_bag_fwd(table, slot_ids, slot_of, valid, n_slots, use_pallas, interpret):
+    out = _embedding_bag_impl(table, slot_ids, slot_of, valid, n_slots, use_pallas, interpret)
+    return out, (table, slot_ids, slot_of, valid)
+
+
+def _embedding_bag_bwd(n_slots, use_pallas, interpret, res, g):
+    """Working-table cotangent without autodiff's dense intermediate chain:
+    route each nonzero's pooled gradient back to its row (a [B, nnz, emb]
+    take_along_axis instead of a one-hot matmul transpose) and scatter-add
+    into the table. The kernel path sorts at this boundary and passes
+    ``assume_sorted=True`` — same work as the wrapper's default sort, but
+    the backward owns its ids ordering (batch ids are never pre-sorted) and
+    the portable path skips sorting entirely."""
+    table, slot_ids, slot_of, valid = res
+    grad_rows = jnp.take_along_axis(g, slot_of[:, :, None].astype(jnp.int32), axis=1)
+    grad_rows = grad_rows * valid[..., None].astype(g.dtype)
+    flat_ids = slot_ids.reshape(-1)
+    flat_grads = grad_rows.reshape(-1, table.shape[1])
+    zeros = jnp.zeros_like(table)
+    if use_pallas:
+        order = jnp.argsort(flat_ids)  # one sort; kernel needs dups adjacent
+        d_table = scatter_add(
+            zeros, flat_ids[order], flat_grads[order],
+            assume_sorted=True, use_pallas=True, interpret=interpret,
+        )
+    else:
+        d_table = _ref.scatter_add_ref(zeros, flat_ids, flat_grads)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int/bool cotangents
+    return d_table, f0(slot_ids), f0(slot_of), f0(valid)
+
+
+_embedding_bag.defvjp(_embedding_bag_fwd, _embedding_bag_bwd)
+
+
+def embedding_bag(
+    table,  # [N, emb] working table
+    slot_ids,  # [B, nnz] int32 working-slot row ids
+    slot_of,  # [B, nnz] int32 pooling bucket per nonzero
+    valid,  # [B, nnz] padding mask (cast to bool: mask semantics, not weights)
+    n_slots: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Fused gather + per-(example, slot) sum-pool -> [B, n_slots, emb].
+
+    THE device lookup+pool primitive for CTR training and serving: on TPU
+    the Pallas kernel (one VMEM pass, nothing materialized), elsewhere the
+    segment-sum fallback — both under a custom VJP whose backward emits
+    working-table cotangents straight through ``scatter_add``.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    valid = valid.astype(jnp.bool_)  # all three impls see identical mask math
+    return _embedding_bag(
+        table, slot_ids, slot_of, valid, int(n_slots), bool(use_pallas), bool(interpret)
+    )
 
 
 # --------------------------------------------------------------------------

@@ -20,6 +20,25 @@ def scatter_add_ref(table: jax.Array, ids: jax.Array, grads: jax.Array) -> jax.A
     return table.at[ids].add(grads.astype(table.dtype))
 
 
+def embedding_bag_ref(
+    table: jax.Array,  # [N, emb]
+    slot_ids: jax.Array,  # [B, nnz] int32
+    slot_of: jax.Array,  # [B, nnz] int32 in [0, n_slots)
+    valid: jax.Array,  # [B, nnz] bool
+    n_slots: int,
+) -> jax.Array:
+    """Gather rows and sum-pool per (example, slot) -> [B, n_slots, emb].
+
+    The seed CTR math (materialized gather + one-hot einsum), kept verbatim
+    as the semantic contract for the fused embedding-bag kernel and its
+    portable segment-sum fallback.
+    """
+    emb = jnp.take(table, slot_ids, axis=0)  # [B, nnz, emb]
+    emb = emb * valid[..., None]
+    onehot = jax.nn.one_hot(slot_of, n_slots, dtype=emb.dtype)  # [B, nnz, n_slots]
+    return jnp.einsum("bne,bns->bse", emb, onehot)  # [B, n_slots, emb]
+
+
 def adagrad_ref(
     params: jax.Array,
     accum: jax.Array,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.ctr_models import CTRConfig
+from repro.kernels import ops as kops
 from repro.models.common import ParamSpec, init_params
 
 
@@ -46,12 +47,14 @@ def embed_pool(
     valid: jax.Array,  # [B, nnz]
     n_slots: int,
 ) -> jax.Array:
-    """Sum-pool embedding rows into per-slot buckets -> [B, n_slots*emb]."""
-    B, nnz = slot_ids.shape
-    emb = jnp.take(working_table, slot_ids, axis=0)  # [B, nnz, emb]
-    emb = emb * valid[..., None]
-    onehot = jax.nn.one_hot(slot_of, n_slots, dtype=emb.dtype)  # [B, nnz, n_slots]
-    pooled = jnp.einsum("bne,bns->bse", emb, onehot)  # [B, n_slots, emb]
+    """Sum-pool embedding rows into per-slot buckets -> [B, n_slots*emb].
+
+    One fused embedding-bag op (``kernels.ops.embedding_bag``): gather and
+    per-slot pooling in a single pass, custom VJP through ``scatter_add``.
+    The semantic contract is ``kernels.ref.embedding_bag_ref`` (the seed's
+    one-hot/einsum math)."""
+    B = slot_ids.shape[0]
+    pooled = kops.embedding_bag(working_table, slot_ids, slot_of, valid, n_slots)
     return pooled.reshape(B, -1)
 
 
@@ -124,9 +127,16 @@ def loss_fn_grouped(cfg, tower, tables: dict, inputs: dict, labels) -> jax.Array
 
 
 def lr_forward(working_table: jax.Array, slot_ids: jax.Array, valid: jax.Array, bias: jax.Array) -> jax.Array:
-    """working_table: [n_working, 1] per-feature weights. Returns logits [B]."""
-    w = jnp.take(working_table[:, 0], slot_ids)  # [B, nnz]
-    return jnp.sum(w * valid, axis=1) + bias
+    """working_table: [n_working, 1] per-feature weights. Returns logits [B].
+
+    An embedding bag with one slot of width 1: the pooled [B, 1, 1] sum of
+    active feature weights IS the linear score. Width-1 rows degenerate to
+    scalar DMAs on the Pallas grid, so this always takes the segment-sum
+    path."""
+    pooled = kops.embedding_bag(
+        working_table, slot_ids, jnp.zeros_like(slot_ids), valid, 1, use_pallas=False
+    )
+    return pooled[:, 0, 0] + bias
 
 
 def lr_loss_fn(working_table, slot_ids, valid, labels, bias) -> jax.Array:

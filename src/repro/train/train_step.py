@@ -17,6 +17,11 @@ working table, Adam on the dense tower.
 (+ accumulator) per slot group, each at its own embedding width, pulled from
 its own named PS table via ``PSClient.session`` — heterogeneous feature
 families co-hosted on one cluster.
+
+Every factory routes working-row updates through ``kops.adagrad_update`` —
+the fused Pallas Adagrad on TPU (pad-to-tile, so odd working-set shapes stay
+on the kernel), the bitwise-identical reference elsewhere — and the CTR
+forward passes pool through the fused embedding-bag op (models/ctr.py).
 """
 
 from __future__ import annotations
@@ -29,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ArchConfig
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 from repro.models import get_model
 from repro.models.common import constrain_like_params
 from repro.train.optim import Adagrad, AdamW
@@ -138,7 +143,7 @@ def make_lm_train_step_hier(cfg: ArchConfig, settings: TrainSettings = TrainSett
         )
         grads = jax.tree.map(lambda g: g / n_micro, acc)
         new_params, new_opt = opt.update(grads[0], opt_state, params)
-        new_table, new_accum = kref.adagrad_ref(
+        new_table, new_accum = kops.adagrad_update(
             working_table, row_accum, grads[1], settings.row_lr
         )
         metrics = {"loss": jnp.mean(losses), "moe_aux": jnp.mean(auxs)}
@@ -176,7 +181,7 @@ def make_ctr_train_step(ctr_cfg, row_lr: float = 0.05, tower_opt: AdamW = AdamW(
             # paper: parameters synchronized across GPUs after EVERY
             # mini-batch — the row update applies to the shared table before
             # the next mini-batch sees it
-            table, accum = kref.adagrad_ref(table, accum, grads[1], row_lr)
+            table, accum = kops.adagrad_update(table, accum, grads[1], row_lr)
             return (tower, opt_state, table, accum), loss
 
         (tower, opt_state, working_table, row_accum), losses = jax.lax.scan(
@@ -214,7 +219,7 @@ def make_ctr_train_step_grouped(ctr_cfg, row_lr: float = 0.05, tower_opt: AdamW 
             # independently per table
             new_tables, new_accums = {}, {}
             for name in tables:
-                new_tables[name], new_accums[name] = kref.adagrad_ref(
+                new_tables[name], new_accums[name] = kops.adagrad_update(
                     tables[name], accums[name], grads[1][name], row_lr
                 )
             return (tower, opt_state, new_tables, new_accums), loss
