@@ -32,6 +32,7 @@ MODULES = [
     "benchmarks.bench_scalability",  # Fig 5b
     "benchmarks.bench_kernels",  # kernel layer
     "benchmarks.bench_train_step",  # fused embedding-bag device step
+    "benchmarks.bench_faults",  # fault ride-through + recovery (§9)
 ]
 
 SMOKE_MODULES = [
@@ -40,6 +41,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_multi_table",
     "benchmarks.bench_serving",
     "benchmarks.bench_train_step",
+    "benchmarks.bench_faults",
 ]
 
 

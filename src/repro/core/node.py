@@ -28,8 +28,10 @@ import numpy as np
 from repro.core.compression import sparse_decode, sparse_encode
 from repro.core.keys import key_to_node, partition_by_owner
 from repro.core.mem_ps import MemParameterServer
+from repro.core.recovery import RedoLog, apply_entries
 from repro.core.ssd_ps import SSDParameterServer
 from repro.core.tables import TableRegistry
+from repro.metrics import Counters
 
 
 @dataclass
@@ -55,9 +57,18 @@ class NetworkModel:
     messages: int = 0
     quantized_messages: int = 0
     quantize_bytes_saved: int = 0  # raw f32 bytes minus encoded packet bytes
+    stalls: int = 0  # NIC_STALL faults absorbed (DESIGN.md §9)
+    stall_time: float = 0.0  # extra virtual seconds those stalls added
+    faults: object = field(default=None, compare=False, repr=False)
 
     def transfer(self, nbytes: int) -> float:
         dt = self.latency_s + nbytes * 8.0 / (self.bandwidth_gbps * 1e9)
+        if self.faults is not None:
+            extra = self.faults.on_transfer(self)
+            if extra > 0.0:
+                dt += extra
+                self.stalls += 1
+                self.stall_time += extra
         self.virtual_time += dt
         self.bytes_moved += nbytes
         self.messages += 1
@@ -89,6 +100,7 @@ class NetworkModel:
         return dataclasses.replace(
             self, virtual_time=0.0, bytes_moved=0, messages=0,
             quantized_messages=0, quantize_bytes_saved=0,
+            stalls=0, stall_time=0.0,
         )
 
 
@@ -117,18 +129,25 @@ class PSNode:
         )
         self.mem = MemParameterServer(self.ssd, capacity=cache_capacity)
         self.alive = True
+        self.faults = None  # armed FaultInjector observing this node's ops
 
     def pull(self, keys: np.ndarray, pin: bool = True) -> np.ndarray:
+        if self.faults is not None:
+            self.faults.on_node_op(self, "pull")
         if not self.alive:
             raise NodeDownError(f"node {self.node_id} is down")
         return self.mem.pull(keys, pin=pin)
 
     def push(self, keys: np.ndarray, values: np.ndarray, unpin: bool = True) -> None:
+        if self.faults is not None:
+            self.faults.on_node_op(self, "push")
         if not self.alive:
             raise NodeDownError(f"node {self.node_id} is down")
         self.mem.push(keys, values, unpin=unpin)
 
     def pin(self, keys: np.ndarray) -> None:
+        if self.faults is not None:
+            self.faults.on_node_op(self, "pin")
         if not self.alive:
             raise NodeDownError(f"node {self.node_id} is down")
         self.mem.pin(keys)
@@ -158,6 +177,10 @@ class Cluster:
         init_scale: float = 0.01,
         init_cols: int | None = None,
         tables: TableRegistry | None = None,
+        redo_rows: int = 0,
+        auto_recover: bool = False,
+        recover_attempts: int = 3,
+        recover_backoff_s: float = 0.005,
     ):
         self.n_nodes = n_nodes
         self.base_dir = base_dir
@@ -171,14 +194,49 @@ class Cluster:
         self.init_cols = init_cols
         self.network = network or NetworkModel()
         self.tables: TableRegistry | None = None
+        # ---- fault model state (DESIGN.md §9) -------------------------
+        # redo_rows > 0 enables the push redo log (exact node recovery,
+        # snapshot healing, live reshard) with auto-flush past that many
+        # retained rows; auto_recover turns a dead-owner segment into
+        # bounded retry-with-backoff around recover_node() instead of
+        # surfacing NodeDownError to the caller
+        self.redo: RedoLog | None = RedoLog() if redo_rows else None
+        self.redo_rows = int(redo_rows)
+        self.auto_recover = bool(auto_recover)
+        self.recover_attempts = int(recover_attempts)
+        self.recover_backoff_s = float(recover_backoff_s)
+        self.fault_counters = Counters(
+            "node_recoveries", "rows_replayed",
+            "ssd_files_quarantined", "ssd_rows_quarantined",
+            "ssd_rows_healed", "ssd_rows_reinit",
+        )
+        self.recovery_time_s = 0.0
+        self._heal_src: "tuple[str, int, int] | None" = None  # (dir, version, redo idx)
+        self._heal_pin: int | None = None
+        self._heal_view = None  # cached ServingVersion for _heal_src
+        # a cluster whose SSD shards started empty can heal exactly from
+        # initializer + full redo even before any snapshot is published;
+        # restore()/reshard clears this (pre-existing rows aren't derivable)
+        self._heal_from_init_ok = True
+        self._write_gate = threading.Event()
+        self._write_gate.set()
         self.nodes = [
             PSNode(i, base_dir, dim, cache_capacity, file_capacity, init_scale, init_cols)
             for i in range(n_nodes)
         ]
+        for node in self.nodes:
+            self._wire_node(node)
         if tables is not None:
             self.register_tables(tables)
         self.pull_local_time = 0.0
         self.pull_remote_time = 0.0
+
+    def _wire_node(self, node: PSNode) -> None:
+        """Attach the cluster's fault-model plumbing to one node's SSD:
+        shared quarantine counters and the exact-heal callback (called on
+        restore() too — a rebuilt SSD instance starts unwired)."""
+        node.ssd.counters = self.fault_counters
+        node.ssd.heal_fn = lambda lost, _node=node: self._heal_rows(_node, lost)
 
     def register_tables(self, tables: TableRegistry) -> None:
         """Host a set of named tables: installs the registry's schema-aware
@@ -206,6 +264,24 @@ class Cluster:
         bounds = np.concatenate([[0], splits, [len(keys)]])
         return order, bounds
 
+    def _with_recovery(self, node_id: int, op):
+        """Run one per-node segment op. A dead owner raises
+        :class:`NodeDownError` — never a silent skip returning
+        uninitialized rows. With ``auto_recover`` the segment instead gets
+        bounded retry-with-backoff around :meth:`recover_node`; the error
+        still surfaces once the attempts are spent or recovery itself is
+        impossible (no redo log)."""
+        attempt = 0
+        while True:
+            try:
+                return op()
+            except NodeDownError:
+                if not self.auto_recover or attempt >= self.recover_attempts:
+                    raise
+                time.sleep(self.recover_backoff_s * (2.0 ** attempt))
+                attempt += 1
+                self.recover_node(node_id)
+
     def pull(self, keys: np.ndarray, requester: int = 0, pin: bool = True) -> np.ndarray:
         """Partitioned pull: local shard from local MEM-PS/SSD-PS, remote
         shards from peer MEM-PS over the (simulated) network.
@@ -224,7 +300,10 @@ class Cluster:
                 continue
             t0 = time.perf_counter()
             try:
-                vals = self.nodes[node_id].pull(sorted_keys[lo:hi], pin=pin)
+                vals = self._with_recovery(
+                    node_id,
+                    lambda n=node_id: self.nodes[n].pull(sorted_keys[lo:hi], pin=pin),
+                )
             except BaseException:
                 if pin:  # roll back this + every prior segment's pins
                     for nid in range(node_id + 1):
@@ -248,8 +327,15 @@ class Cluster:
         return out
 
     def push(self, keys: np.ndarray, values: np.ndarray, requester: int = 0, unpin: bool = True) -> None:
+        if not self._write_gate.wait(timeout=120.0):
+            raise RuntimeError("cluster write gate held >120s (pause_writes leak?)")
         keys = np.asarray(keys, dtype=np.uint64)
         values = np.asarray(values, dtype=np.float32)
+        if self.redo is not None:
+            # logged before any node is touched: a node killed mid-push is
+            # recovered by replaying the log, so a partially-applied push
+            # still converges to fully-applied after recover_node()
+            self.redo.append(keys, values)
         order, bounds = self._partition(keys)
         sorted_keys = keys[order]
         sorted_vals = values[order]
@@ -259,7 +345,19 @@ class Cluster:
                 continue
             if node_id != requester:
                 self.network.transfer((hi - lo) * (8 + 4 * self.dim))
-            self.nodes[node_id].push(sorted_keys[lo:hi], sorted_vals[lo:hi], unpin=unpin)
+            self._with_recovery(
+                node_id,
+                lambda n=node_id, l=lo, h=hi: self.nodes[n].push(
+                    sorted_keys[l:h], sorted_vals[l:h], unpin=unpin
+                ),
+            )
+        if (
+            self.redo is not None
+            and self.redo_rows
+            and self.redo.rows_held > self.redo_rows
+            and all(n.alive for n in self.nodes)
+        ):
+            self.flush_all()  # durability point: log prefix becomes droppable
 
     def pin(self, keys: np.ndarray, requester: int = 0) -> None:
         """Partitioned pin (version-forwarding pin transfer): a successor
@@ -275,7 +373,10 @@ class Cluster:
             if lo == hi:
                 continue
             try:
-                self.nodes[node_id].pin(sorted_keys[lo:hi])
+                self._with_recovery(
+                    node_id,
+                    lambda n=node_id: self.nodes[n].pin(sorted_keys[lo:hi]),
+                )
             except BaseException:
                 for nid in range(node_id):
                     l, h = int(bounds[nid]), int(bounds[nid + 1])
@@ -310,19 +411,147 @@ class Cluster:
             "init_scale": self.init_scale,
             "init_cols": self.init_cols,
             "tables": self.tables,
+            "redo_rows": self.redo_rows,
+            "auto_recover": self.auto_recover,
+            "recover_attempts": self.recover_attempts,
+            "recover_backoff_s": self.recover_backoff_s,
         }
 
     # ------------------------------------------------------------ lifecycle
     def flush_all(self) -> None:
+        all_alive = True
         for n in self.nodes:
             if n.alive:
                 n.mem.flush_all()
+            else:
+                all_alive = False
+        if self.redo is not None and all_alive:
+            # durability point — but only if every shard actually flushed; a
+            # dead node's entries must survive in the log until it recovers
+            self.redo.mark_durable()
 
     def kill_node(self, node_id: int) -> None:
         self.nodes[node_id].kill()
 
     def alive_nodes(self) -> list[int]:
         return [n.node_id for n in self.nodes if n.alive]
+
+    # ------------------------------------------------- recovery (DESIGN §9)
+    def enable_redo(self, max_rows: int = 262_144) -> None:
+        """Turn on the push redo log post-construction (the trainer does
+        this for ride-through runs). ``max_rows`` bounds retained rows via
+        auto-flush; call before the first push for full coverage."""
+        if self.redo is None:
+            self.redo = RedoLog()
+        self.redo_rows = int(max_rows)
+
+    def recover_node(self, node_id: int) -> bool:
+        """Exact recovery of a killed node: restart over the intact SSD
+        shard, then replay the redo log's owner-filtered suffix in order
+        (last writer wins), reconstructing every DRAM-resident update the
+        kill destroyed. Raises :class:`NodeDownError` when the redo log is
+        disabled — a bare ``restart()`` would silently revert the shard to
+        its last flush, which is exactly the corruption this PR removes."""
+        node = self.nodes[node_id]
+        if node.alive:
+            return False
+        if self.redo is None:
+            raise NodeDownError(
+                f"node {node_id} is down and the redo log is disabled; exact "
+                "recovery is impossible (enable_redo(), or restore from a "
+                "checkpoint)"
+            )
+        t0 = time.perf_counter()
+        node.restart()
+        replayed = 0
+        for ekeys, evals in self.redo.entries():
+            mask = self.owner_of(ekeys) == node_id
+            if mask.any():
+                seg_k, seg_v = ekeys[mask], evals[mask]
+                # replayed rows cross the NIC from the requester's log
+                self.network.transfer(len(seg_k) * (8 + 4 * self.dim))
+                node.push(seg_k, seg_v, unpin=False)
+                replayed += len(seg_k)
+        self.fault_counters.inc("node_recoveries")
+        self.fault_counters.inc("rows_replayed", replayed)
+        self.recovery_time_s += time.perf_counter() - t0
+        return True
+
+    def recover_dead_nodes(self) -> list[int]:
+        """Recover every dead node; returns the recovered ids."""
+        return [
+            n.node_id for n in self.nodes if not n.alive and self.recover_node(n.node_id)
+        ]
+
+    def pause_writes(self) -> None:
+        """Close the write gate: pushes block (reads keep flowing). Used by
+        elastic.reshard_live for its delta-replay cutover window."""
+        self._write_gate.clear()
+
+    def resume_writes(self) -> None:
+        self._write_gate.set()
+
+    def pin_redo(self) -> int | None:
+        """Pin the redo log at its current end (heal/reshard cursor)."""
+        return self.redo.pin() if self.redo is not None else None
+
+    def release_redo(self, pin_id: int | None) -> None:
+        if self.redo is not None and pin_id is not None:
+            self.redo.release(pin_id)
+
+    def set_heal_source(self, directory: str, version: int, redo_pin: int | None) -> None:
+        """Register a published snapshot as the exact-heal base for SSD
+        quarantines: ``snapshot(version) + redo[pin:] == current values``.
+        The publisher takes the pin *before* publishing (so the retained
+        suffix covers everything after the snapshot's flush) and hands it
+        over here; the previous heal source's pin is released."""
+        if self.redo is None or redo_pin is None:
+            return
+        idx = self.redo.pin_index(redo_pin)
+        old_pin = self._heal_pin
+        self._heal_src = (directory, int(version), int(idx))
+        self._heal_pin = redo_pin
+        self._heal_view = None
+        if old_pin is not None:
+            self.redo.release(old_pin)
+
+    def _heal_rows(self, node: PSNode, keys: np.ndarray):
+        """Exact current values for rows lost to an SSD quarantine, or
+        ``None`` when only degraded re-initialization is possible.
+
+        Base rows come from the registered heal snapshot (or, for a
+        cluster whose shards started empty, the deterministic initializer
+        with the log covering from index 0); the redo suffix is then
+        replayed over them, oldest first, so the result equals the newest
+        pushed value — bit-exact, which is what keeps training loss
+        trajectories identical through an injected file drop."""
+        if self.redo is None:
+            return None
+        keys = np.asarray(keys, dtype=np.uint64)
+        if self._heal_src is not None:
+            directory, version, idx = self._heal_src
+            if not self.redo.covers(idx):
+                return None  # pin bookkeeping failed us; degrade, don't lie
+            view = self._heal_view
+            if view is None or view.version != version:
+                from repro.serve.snapshot import ServingVersion  # circular import
+
+                view = ServingVersion(directory, version)
+                self._heal_view = view
+            rows = np.empty((len(keys), self.dim), dtype=np.float32)
+            owners = key_to_node(keys, view.n_nodes)
+            for nid in range(view.n_nodes):
+                m = owners == nid
+                if m.any():
+                    rows[m] = view.read(nid, keys[m])
+            entries = self.redo.since(idx)
+        elif self._heal_from_init_ok and self.redo.covers(0):
+            rows = node.ssd.init_rows(keys)
+            entries = self.redo.since(0)
+        else:
+            return None
+        apply_entries(entries, keys, rows)
+        return rows
 
     def manifest(self) -> dict:
         self.flush_all()
@@ -370,6 +599,11 @@ class Cluster:
             m = nodes.get(node.node_id, nodes.get(str(node.node_id)))  # JSON strs
             node.ssd = SSDParameterServer.from_manifest(node.dir, m)
             node.mem = MemParameterServer(node.ssd, capacity=node.mem.capacity)
+            c._wire_node(node)  # rebuilt SSDs need counters + heal_fn again
+        # restored shards hold pre-existing rows the redo log never saw, so
+        # initializer+full-replay healing would fabricate values; exact
+        # healing resumes once a snapshot is published on this cluster
+        c._heal_from_init_ok = False
         if c.tables is not None:
             c.register_tables(c.tables)  # re-install on the restored SSDs
         return c

@@ -164,6 +164,8 @@ class Pipeline:
         self.stats = [StageStats(s.name) for s in stages]
         self.deps = deps
         self._error: Exception | None = None
+        self.error_stage: str | None = None  # stage whose job raised first
+        self.drained_items = 0  # in-flight batches discarded at shutdown
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
 
@@ -187,13 +189,15 @@ class Pipeline:
                 continue
         return _STOPPED
 
-    @staticmethod
-    def _drain(q: queue.Queue) -> None:
+    def _drain(self, q: queue.Queue) -> int:
+        n = 0
         while True:
             try:
-                q.get_nowait()
+                item = q.get_nowait()
+                if item is not _SENTINEL and item is not _STOPPED:
+                    n += 1
             except queue.Empty:
-                return
+                return n
 
     # ------------------------------------------------------------- running
     def run(self, source: Iterable[Any]) -> Iterator[Any]:
@@ -236,7 +240,8 @@ class Pipeline:
                 except Exception as e:
                     if self._error is None:  # keep the root cause: secondary
                         self._error = e  # failures (DependencyAborted in a
-                    self._stop.set()  # stage the abort released) don't mask it
+                        self.error_stage = stage.name  # stage the abort
+                    self._stop.set()  # released) don't mask it
                     if self.deps is not None:
                         self.deps.abort()
                     return
@@ -262,7 +267,10 @@ class Pipeline:
         finally:
             self._shutdown(all_queues)
         if self._error is not None:
-            raise PipelineError(f"pipeline failed: {self._error!r}") from self._error
+            where = f" at stage {self.error_stage!r}" if self.error_stage else ""
+            raise PipelineError(
+                f"pipeline failed{where}: {self._error!r}"
+            ) from self._error
 
     def _shutdown(self, all_queues: list[queue.Queue]) -> None:
         """Halt workers and release every blocked thread: stop flag first
@@ -274,8 +282,10 @@ class Pipeline:
         deadline = time.monotonic() + 5.0
         for t in self._threads:
             t.join(timeout=max(0.0, deadline - time.monotonic()))
-        for q in all_queues:
-            self._drain(q)
+        # drained items are batches that entered the pipeline but never
+        # reached the sink — fault-recovery code (CTRTrainer._ride_through)
+        # replays them from its own buffer; the count is diagnostic
+        self.drained_items += sum(self._drain(q) for q in all_queues)
 
     # ------------------------------------------------- one job, one stage
     def _run_job(self, stage: Stage, stats: StageStats, item: Any) -> Any:

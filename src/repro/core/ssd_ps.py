@@ -31,8 +31,15 @@ Values are float32 rows of fixed width ``dim`` (embedding row [+ optimizer
 slots] — exactly the paper's fixed-size-value observation that lets the
 serialized bucket fit SSD blocks with no I/O amplification).
 
-File layout (little-endian): header  <u32 magic, u32 n_rows, u32 dim>
-followed by n_rows u64 keys then n_rows*dim f32 values.
+File layout (little-endian): header  <u32 magic, u32 n_rows, u32 dim,
+u32 crc32(payload)> followed by the payload: n_rows u64 keys then
+n_rows*dim f32 values. The CRC makes a dropped, truncated, or bit-flipped
+parameter file *detectable* (DESIGN.md §9): a failed read raises
+:class:`SSDCorruptionError` and the file is **quarantined** — its index
+entries are purged and its live rows are either healed exactly from a
+published snapshot + the cluster redo log (``heal_fn``, installed by
+``Cluster``) or degraded to the deterministic missing-row initializer.
+Garbage is never served.
 """
 
 from __future__ import annotations
@@ -41,15 +48,28 @@ import os
 import struct
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.hash_index import U64Index
 from repro.core.keys import deterministic_init
+from repro.metrics import Counters
 
 _MAGIC = 0x55D9A5
-_HEADER = struct.Struct("<III")
+_HEADER = struct.Struct("<IIII")
+
+
+class SSDCorruptionError(RuntimeError):
+    """A parameter file failed its integrity check (missing / truncated /
+    checksum mismatch). Carries the file id so the reader can quarantine."""
+
+    def __init__(self, file_id: int, path: str, reason: str):
+        super().__init__(f"corrupt parameter file {path}: {reason}")
+        self.file_id = file_id
+        self.path = path
+        self.reason = reason
 
 
 @dataclass
@@ -97,6 +117,7 @@ class SSDParameterServer:
         auto_compact: bool = True,
         lock: bool = True,
         initializer=None,
+        counters: Counters | None = None,
     ):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
@@ -120,6 +141,17 @@ class SSDParameterServer:
         self._file_refs: dict[str, int] = {}
         self._orphaned: set[str] = set()
         self.stats = SSDStats()
+        # fault-model wiring (DESIGN.md §9): quarantine/heal event counters
+        # (a Cluster passes its shared fault counters in), the exact-heal
+        # callback (keys -> rows or None) installed by the owning cluster,
+        # and an optional armed FaultInjector observing file reads
+        self.counters = counters if counters is not None else Counters(
+            "ssd_files_quarantined", "ssd_rows_quarantined",
+            "ssd_rows_healed", "ssd_rows_reinit",
+        )
+        self.heal_fn = None
+        self.faults = None
+        self._in_compact = False
         self._lock = threading.RLock() if lock else threading.RLock()
 
     # ------------------------------------------------------------------ io
@@ -131,10 +163,13 @@ class SSDParameterServer:
         self._next_file_id += 1
         path = self._file_path(fid)
         t0 = time.perf_counter()
+        kb = np.ascontiguousarray(keys, dtype=np.uint64).tobytes()
+        vb = np.ascontiguousarray(values, dtype=np.float32).tobytes()
+        crc = zlib.crc32(vb, zlib.crc32(kb)) & 0xFFFFFFFF
         with open(path, "wb") as f:
-            f.write(_HEADER.pack(_MAGIC, len(keys), self.dim))
-            f.write(np.ascontiguousarray(keys, dtype=np.uint64).tobytes())
-            f.write(np.ascontiguousarray(values, dtype=np.float32).tobytes())
+            f.write(_HEADER.pack(_MAGIC, len(keys), self.dim, crc))
+            f.write(kb)
+            f.write(vb)
         self.stats.write_time += time.perf_counter() - t0
         nbytes = _HEADER.size + keys.nbytes + values.nbytes
         self.stats.bytes_written += nbytes
@@ -143,13 +178,36 @@ class SSDParameterServer:
         return fid
 
     def _read_file(self, fid: int) -> tuple[np.ndarray, np.ndarray]:
+        """Whole-file read with integrity verification. Any failure —
+        missing file (dropped), short read (truncated), header or CRC
+        mismatch (bit rot) — raises :class:`SSDCorruptionError`; the file
+        is never partially served."""
         meta = self.files[fid]
+        if self.faults is not None:
+            self.faults.on_file_read(self, meta)
         t0 = time.perf_counter()
-        with open(meta.path, "rb") as f:
-            magic, n_rows, dim = _HEADER.unpack(f.read(_HEADER.size))
-            assert magic == _MAGIC and dim == self.dim, "corrupt parameter file"
-            keys = np.frombuffer(f.read(8 * n_rows), dtype=np.uint64)
-            values = np.frombuffer(f.read(4 * n_rows * dim), dtype=np.float32)
+        try:
+            with open(meta.path, "rb") as f:
+                head = f.read(_HEADER.size)
+                if len(head) < _HEADER.size:
+                    raise SSDCorruptionError(fid, meta.path, "truncated header")
+                magic, n_rows, dim, crc = _HEADER.unpack(head)
+                if magic != _MAGIC:
+                    raise SSDCorruptionError(fid, meta.path, "bad magic")
+                if dim != self.dim or n_rows != meta.n_rows:
+                    raise SSDCorruptionError(
+                        fid, meta.path,
+                        f"header mismatch (dim={dim}, n_rows={n_rows})",
+                    )
+                payload = f.read(n_rows * (8 + 4 * dim))
+        except OSError as e:  # FileNotFoundError, EIO, ...
+            raise SSDCorruptionError(fid, meta.path, f"unreadable: {e}") from e
+        if len(payload) != n_rows * (8 + 4 * dim):
+            raise SSDCorruptionError(fid, meta.path, "truncated payload")
+        if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+            raise SSDCorruptionError(fid, meta.path, "checksum mismatch")
+        keys = np.frombuffer(payload[: 8 * n_rows], dtype=np.uint64)
+        values = np.frombuffer(payload[8 * n_rows :], dtype=np.float32)
         self.stats.read_time += time.perf_counter() - t0
         self.stats.bytes_read += _HEADER.size + keys.nbytes + values.nbytes
         self.stats.files_read += 1
@@ -183,38 +241,104 @@ class SSDParameterServer:
                 last = np.empty(len(uniq), dtype=np.int64)
                 last[inverse] = np.arange(len(k))
                 self.index.set(uniq, fid * self.file_capacity + last)
-            if self.auto_compact:
+            if self.auto_compact and not self._in_compact:
+                # quarantine healing writes from inside a compaction read
+                # path; re-entering compact there would recurse
                 self.compact()
 
     def read_batch(self, keys: np.ndarray) -> np.ndarray:
         """Gather rows for ``keys``; whole-file reads; missing keys get the
-        deterministic per-key initialization (fresh parameters)."""
+        deterministic per-key initialization (fresh parameters).
+
+        A file that fails its integrity check mid-gather is quarantined
+        (index purged, live rows healed exactly via ``heal_fn`` or left to
+        re-initialize) and the gather retries — each quarantine removes one
+        file, so the loop terminates. The caller never sees garbage rows
+        and never sees the corruption as an exception."""
         keys = np.asarray(keys, dtype=np.uint64)
-        out = np.empty((len(keys), self.dim), dtype=np.float32)
         with self._lock:
             self.stats.rows_requested += len(keys)
-            locs = self.index.lookup(keys)
-            found = np.nonzero(locs >= 0)[0]
-            if found.size:
-                floc = locs[found]
-                order = np.argsort(floc, kind="stable")  # groups by file id
-                floc, found = floc[order], found[order]
-                fids = floc // self.file_capacity
-                starts = np.concatenate([[0], np.nonzero(np.diff(fids))[0] + 1, [len(fids)]])
-                for s, e in zip(starts[:-1], starts[1:]):
-                    _, vals = self._read_file(int(fids[s]))  # file = I/O unit
-                    out[found[s:e]] = vals[floc[s:e] % self.file_capacity]
-            missing = locs < 0
-            if missing.any():
-                if self.initializer is not None:
-                    out[missing] = self.initializer(keys[missing])
-                else:
-                    fresh = np.zeros((int(missing.sum()), self.dim), dtype=np.float32)
-                    fresh[:, : self.init_cols] = deterministic_init(
-                        keys[missing], self.init_cols, self.init_scale
-                    )
-                    out[missing] = fresh
+            while True:
+                try:
+                    return self._gather_locked(keys)
+                except SSDCorruptionError as e:
+                    self._quarantine_locked(e.file_id)
+
+    def _gather_locked(self, keys: np.ndarray) -> np.ndarray:
+        out = np.empty((len(keys), self.dim), dtype=np.float32)
+        locs = self.index.lookup(keys)
+        found = np.nonzero(locs >= 0)[0]
+        if found.size:
+            floc = locs[found]
+            order = np.argsort(floc, kind="stable")  # groups by file id
+            floc, found = floc[order], found[order]
+            fids = floc // self.file_capacity
+            starts = np.concatenate([[0], np.nonzero(np.diff(fids))[0] + 1, [len(fids)]])
+            for s, e in zip(starts[:-1], starts[1:]):
+                _, vals = self._read_file(int(fids[s]))  # file = I/O unit
+                out[found[s:e]] = vals[floc[s:e] % self.file_capacity]
+        missing = locs < 0
+        if missing.any():
+            out[missing] = self.init_rows(keys[missing])
         return out
+
+    def init_rows(self, keys: np.ndarray) -> np.ndarray:
+        """Deterministic fresh-parameter rows for never-seen keys (also the
+        degraded-serving fallback for unhealable quarantined rows)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if self.initializer is not None:
+            return np.asarray(self.initializer(keys), dtype=np.float32)
+        fresh = np.zeros((len(keys), self.dim), dtype=np.float32)
+        fresh[:, : self.init_cols] = deterministic_init(
+            keys, self.init_cols, self.init_scale
+        )
+        return fresh
+
+    # ---------------------------------------------------------- quarantine
+    def quarantine_file(self, file_id: int) -> int:
+        """Public entry (tests/operators): quarantine one parameter file.
+        Returns the number of live rows that were lost from the file."""
+        with self._lock:
+            return self._quarantine_locked(file_id)
+
+    def _quarantine_locked(self, file_id: int) -> int:
+        """Pull a corrupt file out of service: purge its index entries,
+        delete it from disk, then restore its live rows — exactly, via
+        ``heal_fn`` (published snapshot + redo-log replay, wired by the
+        Cluster), or degraded, by leaving them to the missing-row
+        initializer. Counter names follow the DESIGN.md §9 fault model."""
+        meta = self.files.pop(file_id, None)
+        if meta is None:
+            return 0
+        all_keys, all_locs = self.index.items()
+        lost = all_keys[all_locs // self.file_capacity == file_id]
+        if lost.size:
+            self.index.delete(lost)
+        self.counters.inc("ssd_files_quarantined")
+        self.counters.inc("ssd_rows_quarantined", int(lost.size))
+        self._orphaned.discard(meta.path)
+        self._file_refs.pop(meta.path, None)  # corrupt: no version can use it
+        try:
+            os.remove(meta.path)
+        except OSError:
+            pass
+        if not lost.size:
+            return 0
+        healed = None
+        if self.heal_fn is not None:
+            try:
+                healed = self.heal_fn(lost)
+            except SSDCorruptionError:
+                raise  # a snapshot view hit corruption too: let reader retry
+            except Exception:
+                healed = None  # heal source unavailable -> degraded serving
+        if healed is not None:
+            self.write_batch(lost, np.asarray(healed, dtype=np.float32))
+            self.counters.inc("ssd_rows_healed", int(lost.size))
+        else:
+            # rows fall back to the deterministic initializer on next read
+            self.counters.inc("ssd_rows_reinit", int(lost.size))
+        return int(lost.size)
 
     def contains(self, key: int) -> bool:
         return bool(self.index.contains(np.asarray([key], dtype=np.uint64))[0])
@@ -235,32 +359,48 @@ class SSDParameterServer:
             if not victims:
                 return 0
             t0 = time.perf_counter()
-            live_keys: list[np.ndarray] = []
-            live_vals: list[np.ndarray] = []
-            for meta in victims:
-                fkeys, fvals = self._read_file(meta.file_id)
-                current = meta.file_id * self.file_capacity + np.arange(len(fkeys))
-                mask = self.index.lookup(fkeys) == current
-                if mask.any():
-                    live_keys.append(fkeys[mask])
-                    live_vals.append(fvals[mask])
-            # write survivors as fresh files and erase victims
-            if live_keys:
-                all_k = np.concatenate(live_keys)
-                all_v = np.concatenate(live_vals)
-                for start in range(0, len(all_k), self.file_capacity):
-                    sl = slice(start, start + self.file_capacity)
-                    k, v = all_k[sl], all_v[sl]
-                    fid = self._write_file(k, v)
-                    self.index.set(k, fid * self.file_capacity + np.arange(len(k)))
-            for meta in victims:
-                if self._file_refs.get(meta.path, 0) > 0:
-                    # a published snapshot still points here: park the path
-                    # until every referencing version is released
-                    self._orphaned.add(meta.path)
-                else:
-                    os.remove(meta.path)
-                del self.files[meta.file_id]
+            self._in_compact = True
+            try:
+                live_keys: list[np.ndarray] = []
+                live_vals: list[np.ndarray] = []
+                for meta in victims:
+                    try:
+                        fkeys, fvals = self._read_file(meta.file_id)
+                    except SSDCorruptionError:
+                        # victim turned out corrupt: quarantine it (heals or
+                        # degrades its live rows) instead of aborting the
+                        # whole compaction
+                        self._quarantine_locked(meta.file_id)
+                        continue
+                    current = meta.file_id * self.file_capacity + np.arange(len(fkeys))
+                    mask = self.index.lookup(fkeys) == current
+                    if mask.any():
+                        live_keys.append(fkeys[mask])
+                        live_vals.append(fvals[mask])
+                # write survivors as fresh files and erase victims
+                if live_keys:
+                    all_k = np.concatenate(live_keys)
+                    all_v = np.concatenate(live_vals)
+                    for start in range(0, len(all_k), self.file_capacity):
+                        sl = slice(start, start + self.file_capacity)
+                        k, v = all_k[sl], all_v[sl]
+                        fid = self._write_file(k, v)
+                        self.index.set(k, fid * self.file_capacity + np.arange(len(k)))
+                for meta in victims:
+                    if meta.file_id not in self.files:
+                        continue  # quarantined above: already gone
+                    if self._file_refs.get(meta.path, 0) > 0:
+                        # a published snapshot still points here: park the path
+                        # until every referencing version is released
+                        self._orphaned.add(meta.path)
+                    else:
+                        try:
+                            os.remove(meta.path)
+                        except FileNotFoundError:
+                            pass
+                    del self.files[meta.file_id]
+            finally:
+                self._in_compact = False
             self.stats.compactions += 1
             self.stats.compaction_time += time.perf_counter() - t0
             return len(victims)
@@ -331,6 +471,11 @@ class SSDParameterServer:
                         except FileNotFoundError:
                             pass
 
+    def is_retained(self, path: str) -> bool:
+        """True if a published snapshot holds a retention ref on ``path``."""
+        with self._lock:
+            return self._file_refs.get(path, 0) > 0
+
     @property
     def n_retained_orphans(self) -> int:
         """Stale-but-retained files currently parked on disk."""
@@ -370,11 +515,28 @@ class SSDParameterServer:
         return ps
 
     def iter_live(self, chunk: int = 65536):
-        """Yield (keys, values) over all live rows (for reshard/checkpoint)."""
+        """Yield (keys, values) over all live rows (for reshard/checkpoint).
+
+        Corruption-safe: a corrupt file is quarantined in place and, if it
+        healed, its rows land in a *new* file — so iteration re-scans for
+        unvisited file ids each round instead of snapshotting the file list
+        up front (a snapshot would silently skip the healed rows)."""
         with self._lock:
-            for fid in list(self.files):
-                fkeys, fvals = self._read_file(fid)
-                current = fid * self.file_capacity + np.arange(len(fkeys))
-                mask = self.index.lookup(fkeys) == current
-                if mask.any():
-                    yield fkeys[mask], fvals[mask]
+            visited: set[int] = set()
+            while True:
+                pending = [fid for fid in self.files if fid not in visited]
+                if not pending:
+                    return
+                for fid in pending:
+                    visited.add(fid)
+                    if fid not in self.files:
+                        continue  # merged away by a heal-triggered compaction
+                    try:
+                        fkeys, fvals = self._read_file(fid)
+                    except SSDCorruptionError:
+                        self._quarantine_locked(fid)
+                        continue
+                    current = fid * self.file_capacity + np.arange(len(fkeys))
+                    mask = self.index.lookup(fkeys) == current
+                    if mask.any():
+                        yield fkeys[mask], fvals[mask]

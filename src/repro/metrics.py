@@ -39,6 +39,15 @@ class Counters:
         with self._lock:
             self._c = {n: 0 for n in self._c}
 
+    def add_from(self, other: "Counters | dict") -> None:
+        """Accumulate another counter set (or plain dict) into this one —
+        benches merge per-subsystem counters (cluster faults, serving
+        engine) into one report without losing either source."""
+        src = other.snapshot() if isinstance(other, Counters) else dict(other)
+        with self._lock:
+            for n, v in src.items():
+                self._c[n] = self._c.get(n, 0) + int(v)
+
 
 def auc(labels: np.ndarray, scores: np.ndarray) -> float:
     """Rank-based AUC (Mann-Whitney), with tie averaging."""

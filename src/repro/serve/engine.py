@@ -53,6 +53,9 @@ COUNTER_NAMES = (
     "device_rows_reused",
     "rows_served",
     "version_rolls",
+    "failovers",
+    "failover_rows",
+    "failed_lookups",
 )
 
 
@@ -247,8 +250,14 @@ class ServingEngine:
         device_hot_rows: int = 0,
         coalesce_window_s: float = 0.0,
         counters: Counters | None = None,
+        fallbacks: "list | tuple" = (),
     ):
         self.source = source
+        # surviving replicas to serve from when the primary source fails
+        # mid-lookup (DESIGN.md §9): tried in order, each on its own active
+        # version — degraded serving, so failover rows are never cached
+        # under the primary's version key
+        self.fallbacks = list(fallbacks)
         self.counters = counters or Counters(*COUNTER_NAMES)
         self.cache = HotRowCache(cache_rows, source.dim) if cache_rows else None
         self.coalesce_window_s = float(coalesce_window_s)
@@ -275,6 +284,8 @@ class ServingEngine:
         acquired. Stale cache/device-resident rows become misses."""
         before = self.source.version
         after = self.source.roll_forward(version)
+        for fb in self.fallbacks:
+            fb.roll_forward(after)  # replicas track the primary's version
         if after != before:
             self.counters.inc("version_rolls")
         return after
@@ -283,6 +294,29 @@ class ServingEngine:
         spec = self.registry.require(table)
         arr = np.asarray(keys, dtype=np.uint64)
         return _Request(spec, np.shape(arr), spec.namespace(arr).reshape(-1))
+
+    # ------------------------------------------------------------- failover
+    def _pull_source(self, view, keys: np.ndarray) -> "tuple[np.ndarray, bool]":
+        """Pull ``keys`` from the primary source, failing over to surviving
+        fallback replicas when it raises (replica loss rides through as a
+        served request, not an error). Returns ``(rows, cacheable)`` —
+        failover rows come from the fallback's own active version, so they
+        must NOT be cached under the primary view's version key (a later
+        hot hit would have to be bit-identical to a primary cold pull).
+        Only when every replica fails does the original error surface."""
+        try:
+            return self.source.pull(keys, view=view), True
+        except Exception as primary_err:
+            for fb in self.fallbacks:
+                try:
+                    rows = fb.pull(keys, view=fb.acquire())
+                except Exception:
+                    continue  # this replica is gone too; try the next
+                self.counters.inc("failovers")
+                self.counters.inc("failover_rows", len(keys))
+                return rows, False
+            self.counters.inc("failed_lookups")
+            raise primary_err
 
     # ------------------------------------------------------------ hot cache
     def _rows_for(self, view, uniq: np.ndarray) -> np.ndarray:
@@ -299,7 +333,8 @@ class ServingEngine:
         version = view.version
         if self.cache is None:
             self.counters.inc("hot_misses", len(uniq))
-            return self.source.pull(uniq, view=view)
+            rows, _ = self._pull_source(view, uniq)
+            return rows
         with self._cache_mu:
             mask, hit_rows = self.cache.lookup(uniq, version)
         n_hit = int(mask.sum())
@@ -310,10 +345,11 @@ class ServingEngine:
         out[mask] = hit_rows
         miss = ~mask
         self.counters.inc("hot_misses", int(miss.sum()))
-        pulled = self.source.pull(uniq[miss], view=view)
+        pulled, cacheable = self._pull_source(view, uniq[miss])
         out[miss] = pulled
-        with self._cache_mu:
-            self.cache.insert(uniq[miss], pulled, version)
+        if cacheable:
+            with self._cache_mu:
+                self.cache.insert(uniq[miss], pulled, version)
         return out
 
     # ------------------------------------------------------------- lookups

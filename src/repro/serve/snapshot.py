@@ -39,7 +39,7 @@ import threading
 import numpy as np
 
 from repro.core.keys import key_to_node, partition_by_owner
-from repro.core.node import Cluster, NetworkModel
+from repro.core.node import Cluster, NetworkModel, NodeDownError
 from repro.core.ssd_ps import SSDParameterServer
 from repro.core.tables import TableRegistry
 from repro.train.checkpoint import atomic_write_json, flip_pointer
@@ -117,6 +117,11 @@ class SnapshotPublisher:
         with self._lock:
             version = self._next
             self._next += 1
+            # pin the redo log *before* the manifest's flush: the retained
+            # suffix then covers every push after this snapshot's state, so
+            # the cluster can heal a quarantined SSD file bit-exactly as
+            # snapshot(version) + redo replay (DESIGN.md §9)
+            redo_pin = self.cluster.pin_redo()
             m = self.cluster.publish_manifest()  # flush + atomic retention
             retained = {
                 int(nid): list(nm.get("retained_paths", []))
@@ -131,6 +136,7 @@ class SnapshotPublisher:
                 os.path.basename(_version_path(self.dir, version)),
             )
             self._live[version] = retained
+            self.cluster.set_heal_source(self.dir, version, redo_pin)
             if self.keep > 0:
                 for v in sorted(self._live)[: -self.keep]:
                     self._release_locked(v)
@@ -249,6 +255,15 @@ class ServingCluster:
             if version is None:
                 raise FileNotFoundError(f"no published versions in {directory}")
         self._active = ServingVersion(directory, version)
+        self.alive = True
+
+    # ---------------------------------------------------------- fault model
+    def kill(self) -> None:
+        """Simulate losing this serving replica: subsequent pulls raise
+        :class:`~repro.core.node.NodeDownError` (the engine fails over to
+        surviving replicas, DESIGN.md §9) until a roll_forward revives it —
+        modeling a replacement replica coming up on the published version."""
+        self.alive = False
 
     # ------------------------------------------------------------ versions
     @property
@@ -276,8 +291,10 @@ class ServingCluster:
         with self._lock:
             target = latest_version(self.dir) if version is None else int(version)
             if target is None or target == self._active.version:
+                self.alive = True  # replacement replica on the same version
                 return self._active.version
             self._active = ServingVersion(self.dir, target)
+            self.alive = True
             return self._active.version
 
     # ---------------------------------------------------------------- pull
@@ -285,6 +302,8 @@ class ServingCluster:
         """Owner-partitioned read of ``keys`` (cluster key space) against
         one version. Remote segments cross the simulated NIC; serving reads
         ride the int8 wire when the network opts in."""
+        if not self.alive:
+            raise NodeDownError("serving replica is down")
         view = view or self.acquire()
         keys = np.asarray(keys, dtype=np.uint64)
         owners = key_to_node(keys, view.n_nodes)

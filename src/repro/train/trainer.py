@@ -43,7 +43,7 @@ import numpy as np
 from repro.configs.ctr_models import CTRConfig, table_specs
 from repro.core.client import PSClient
 from repro.core.hbm_ps import DeviceWorkingSet
-from repro.core.node import Cluster
+from repro.core.node import Cluster, NodeDownError
 from repro.core.pipeline import Pipeline, Stage
 from repro.data.synthetic_ctr import CTRBatch, SyntheticCTRStream
 from repro.models import ctr as ctr_model
@@ -67,6 +67,14 @@ class TrainerConfig:
     # advances the reuse plan, train owns the model) are never speculated
     stage_timeout: float | None = None
     device_reuse: bool = True  # cross-batch device working-set residency
+    # ride-through recovery (DESIGN.md §9): on a NodeDownError mid-pipeline,
+    # recover the dead node (restart + redo-log replay), land the trained
+    # prefix's deferred pushes, drain the untrained remainder, replay it
+    # serially from the batch replay buffer, then resume pipelining — the
+    # recovered run's losses stay bitwise-equal to a fault-free run
+    ride_through: bool = False
+    max_recoveries: int = 4  # distinct faults survived per run() call
+    redo_rows: int = 262_144  # redo-log auto-flush bound (ride_through)
 
 
 class CTRTrainer:
@@ -97,6 +105,16 @@ class CTRTrainer:
         self._prev_table = None  # previous batch's final device rows
         self._prev_accum = None
         self._train_seq = 0  # device-table generation (guards reuse plans)
+        # ride-through state: batches enter _replay when the feeder hands
+        # them to the pipeline and leave when their train stage completes,
+        # so a mid-pipeline failure knows exactly which batches still need
+        # (re-)training; _results collects every completed batch's result
+        # dict even when the pipeline dies before yielding it downstream
+        self._replay: dict[int, CTRBatch] = {}
+        self._results: dict[int, dict] = {}
+        self.recovery_time_s = 0.0
+        if self.tcfg.ride_through:
+            cluster.enable_redo(self.tcfg.redo_rows)
         self.ckpt = (
             ckpt.AsyncCheckpointer(tcfg.checkpoint_dir) if tcfg.checkpoint_every else None
         )
@@ -195,7 +213,13 @@ class CTRTrainer:
             and self.batches_done % self.tcfg.publish_every == 0
         ):
             self.publish()
-        return {"batch_id": batch.batch_id, "loss": loss, "n_working": sess.n_working}
+        result = {"batch_id": batch.batch_id, "loss": loss, "n_working": sess.n_working}
+        # recorded here (not at the pipeline sink): a batch whose result
+        # dict is still in a queue when the pipeline dies has already
+        # trained — it must count as done, not be replayed
+        self._results[batch.batch_id] = result
+        self._replay.pop(batch.batch_id, None)
+        return result
 
     def publish(self) -> int:
         """Publish a serving snapshot at a consistent cut: every batch up to
@@ -229,22 +253,88 @@ class CTRTrainer:
             deps=self.client.deps,
         )
 
+    def _record(self, src):
+        """Tee the source into the replay buffer: every batch handed to the
+        pipeline is retained until its train stage completes."""
+        for b in src:
+            self._replay[b.batch_id] = b
+            yield b
+
+    @staticmethod
+    def _node_down_in(e: BaseException | None) -> bool:
+        """Is a NodeDownError anywhere in the cause chain? (The pipeline
+        wraps stage errors in PipelineError ``from`` the root cause.)"""
+        seen: set[int] = set()
+        while e is not None and id(e) not in seen:
+            if isinstance(e, NodeDownError):
+                return True
+            seen.add(id(e))
+            e = e.__cause__ or e.__context__
+        return False
+
+    def _ride_through(self) -> None:
+        """Recover from a node kill mid-pipeline, preserving the bitwise
+        serial-parity contract (DESIGN.md §9):
+
+        1. restart + redo-replay every dead node (exact pre-kill values);
+        2. drain: the trained prefix's deferred pushes land (train runs in
+           batch order, so trained in-flight entries are always a prefix),
+           the untrained remainder is unpinned and forgotten;
+        3. replay the untrained batches serially — serial and pipelined
+           execution are bitwise-identical, so the recovered trajectory
+           equals the fault-free one;
+        4. the caller then resumes pipelined execution on the rest of the
+           stream. A second fault during replay lands back here."""
+        t0 = time.perf_counter()
+        self.cluster.recover_dead_nodes()
+        # strict drain: after recovery, a push failure is a real error
+        self.client.drain()
+        self.dev_ws.reset()
+        self._prev_table = self._prev_accum = None
+        for bid in sorted(self._replay):
+            batch = self._replay[bid]  # popped by _stage_train on success
+            self._stage_train(self._stage_transfer(self._stage_pull(batch)))
+        self.recovery_time_s += time.perf_counter() - t0
+
     def run(self, stream, n_batches: int, pipelined: bool = True):
         src = (next(it) for it in [iter(stream)] for _ in range(n_batches))
-        try:
-            if pipelined:
-                pipe = self.build_pipeline()
-                results = list(pipe.run(src))
-                self.last_pipeline = pipe
-            else:  # serial baseline (the "no pipeline" ablation)
-                results = []
-                for b in src:
-                    results.append(self._stage_train(self._stage_transfer(self._stage_pull(b))))
-        except BaseException:
-            # failure path: release pins without masking the primary error
-            self.client.drain(strict=False)
-            self.dev_ws.reset()
-            raise
+        self._replay.clear()
+        self._results.clear()
+        recorded = self._record(src)
+        recoveries = 0
+        while True:
+            try:
+                if pipelined:
+                    pipe = self.build_pipeline()
+                    for _ in pipe.run(recorded):
+                        pass  # results are recorded at the train stage
+                    self.last_pipeline = pipe
+                else:  # serial baseline (the "no pipeline" ablation)
+                    for b in recorded:
+                        self._stage_train(self._stage_transfer(self._stage_pull(b)))
+                break
+            except BaseException as e:
+                # a further kill *during* the replay lands back here too:
+                # keep recovering until the replay completes or the budget
+                # (or a non-node-down failure) stops it
+                while (
+                    self.tcfg.ride_through
+                    and recoveries < self.tcfg.max_recoveries
+                    and self._node_down_in(e)
+                ):
+                    recoveries += 1
+                    try:
+                        self._ride_through()
+                        e = None
+                        break
+                    except BaseException as e2:
+                        e = e2
+                if e is None:
+                    continue  # resume pipelining on the remaining stream
+                # failure path: release pins without masking the primary error
+                self.client.drain(strict=False)
+                self.dev_ws.reset()
+                raise e
         # success path: the tail batches' deferred pushes MUST land (a
         # failure here is a real error) — then drop cross-run device
         # residency: a later run may follow a resume(), where the cached
@@ -253,7 +343,7 @@ class CTRTrainer:
         self.dev_ws.reset()
         if self.ckpt:
             self.ckpt.wait()
-        return results
+        return [self._results[b] for b in sorted(self._results)]
 
     # ------------------------------------------------------------ recovery
     def resume(self) -> int:

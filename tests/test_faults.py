@@ -1,0 +1,497 @@
+"""Fault injection + ride-through recovery across the PS hierarchy (§9).
+
+Pins the acceptance contract of the fault model:
+
+* dead owners are surfaced (``NodeDownError``), never silently skipped —
+  and with ``auto_recover`` the cluster rides through transparently;
+* ``recover_node`` (restart + redo replay) restores a killed node's DRAM
+  state *bit-exactly*;
+* SSD file corruption (drop/truncate/bit-flip) is detected by the CRC32
+  checksum, quarantined, and healed bit-exactly from snapshot+redo (or the
+  deterministic initializer+redo for clusters born empty) — garbage is
+  never served;
+* the pipelined trainer drains in-flight batches on a node kill, replays
+  them after recovery, and finishes with losses and parameters bitwise
+  equal to a fault-free run;
+* elastic reshard recovers (or raises with the at-risk row count) instead
+  of dropping a dead shard's rows; ``reshard_live`` replays the redo delta
+  so the new cluster matches the old bit-for-bit;
+* the serving engine fails over to surviving replicas and never poisons
+  the hot-row cache with failover rows;
+* the :class:`FaultInjector` itself is deterministic (seeded schedules).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.ctr_models import TINY
+from repro.core import elastic
+from repro.core.client import PSClient
+from repro.core.faults import (
+    NIC_STALL,
+    NODE_KILL,
+    SSD_DROP,
+    SSD_TRUNCATE,
+    FaultInjector,
+    FaultSpec,
+)
+from repro.core.node import Cluster, NodeDownError
+from repro.core.recovery import RedoLog, RedoTruncatedError, collapse_entries
+from repro.core.ssd_ps import SSDCorruptionError
+from repro.core.tables import RowSchema, TableSpec
+from repro.data.synthetic_ctr import SyntheticCTRStream
+from repro.serve import ServingCluster, ServingEngine, SnapshotPublisher
+from repro.train.trainer import CTRTrainer, TrainerConfig
+
+DIM = 8
+
+
+def make_cluster(tmp_path, tag="ps", n=2, **kw):
+    kw.setdefault("cache_capacity", 1024)
+    kw.setdefault("file_capacity", 32)
+    return Cluster(n, str(tmp_path / tag), dim=DIM, **kw)
+
+
+def rand_rows(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, DIM)).astype(np.float32)
+
+
+# ------------------------------------------------------------ redo log
+
+
+def test_redo_log_pin_and_compaction():
+    log = RedoLog()
+    k = np.arange(10, dtype=np.uint64)
+    log.append(k, rand_rows(10, 1))
+    pin = log.pin()
+    log.append(k, rand_rows(10, 2))
+    log.mark_durable()  # compacts only up to the pin
+    assert log.covers(log.pin_index(pin))
+    assert len(log.since(log.pin_index(pin))) == 1  # the post-pin entry
+    log.release(pin)
+    log.mark_durable()
+    with pytest.raises(RedoTruncatedError):
+        log.since(0)
+
+
+def test_collapse_entries_last_writer_wins():
+    log = RedoLog()
+    k = np.array([1, 2, 3], dtype=np.uint64)
+    log.append(k, np.full((3, DIM), 1.0, np.float32))
+    log.append(k[:2], np.full((2, DIM), 2.0, np.float32))
+    ck, cv = collapse_entries(log.entries())
+    got = {int(a): float(b[0]) for a, b in zip(ck, cv)}
+    assert got == {1: 2.0, 2: 2.0, 3: 1.0}
+
+
+# ------------------------------------------------------- fault injector
+
+
+def test_injector_seeded_schedule_is_deterministic():
+    a = FaultInjector.from_seed(7, n_nodes=4, kills=2, drops=1, stalls=1)
+    b = FaultInjector.from_seed(7, n_nodes=4, kills=2, drops=1, stalls=1)
+    assert a.schedule == b.schedule
+    c = FaultInjector.from_seed(8, n_nodes=4, kills=2, drops=1, stalls=1)
+    assert a.schedule != c.schedule
+
+
+def test_injector_kill_fires_at_op_and_surfaces_node_down(tmp_path):
+    cl = make_cluster(tmp_path)
+    inj = FaultInjector([FaultSpec(NODE_KILL, at_op=3, node_id=1)]).arm(cl)
+    keys = np.arange(64, dtype=np.uint64)
+    cl.pull(keys, pin=False)  # ops 1..2 (one per touched node)
+    with pytest.raises(NodeDownError):
+        # op 3 kills node 1 -> the touch of node 1 in this pull raises
+        cl.pull(keys, pin=False)
+    assert not cl.nodes[1].alive and inj.all_fired()
+    assert inj.fired[0]["kind"] == NODE_KILL
+    inj.disarm()
+    assert cl.nodes[0].faults is None and cl.network.faults is None
+
+
+def test_injector_nic_stall_adds_latency(tmp_path):
+    cl = make_cluster(tmp_path)
+    FaultInjector([FaultSpec(NIC_STALL, at_op=1, stall_s=0.5)]).arm(cl)
+    before = cl.network.stall_time
+    cl.pull(np.arange(64, dtype=np.uint64), pin=False)
+    assert cl.network.stall_time >= before + 0.5
+
+
+# ------------------------------------- dead owners surface, never skip
+
+
+def test_pull_push_pin_raise_on_dead_owner(tmp_path):
+    """Satellite: Cluster.pull/push/pin previously skipped dead owners
+    silently (returning init rows / dropping updates). They must raise."""
+    cl = make_cluster(tmp_path)
+    keys = np.arange(100, dtype=np.uint64)  # spans both shards
+    rows = rand_rows(100)
+    cl.push(keys, rows, unpin=False)
+    cl.kill_node(1)
+    with pytest.raises(NodeDownError):
+        cl.pull(keys, pin=False)
+    with pytest.raises(NodeDownError):
+        cl.push(keys, rows, unpin=False)
+    with pytest.raises(NodeDownError):
+        cl.pin(keys)
+    assert cl.total_pins() == 0
+
+
+def test_auto_recover_rides_through_a_kill(tmp_path):
+    cl = make_cluster(tmp_path, auto_recover=True)
+    cl.enable_redo()
+    keys = np.arange(100, dtype=np.uint64)
+    rows = rand_rows(100)
+    cl.push(keys, rows, unpin=False)
+    cl.kill_node(1)
+    got = cl.pull(keys, pin=False)  # transparent restart + redo replay
+    np.testing.assert_array_equal(got, rows)
+    assert cl.fault_counters["node_recoveries"] == 1
+    assert cl.recovery_time_s > 0.0
+
+
+# ----------------------------------------------------- exact recovery
+
+
+def test_recover_node_is_bit_exact(tmp_path):
+    cl = make_cluster(tmp_path)
+    cl.enable_redo()
+    keys = np.arange(200, dtype=np.uint64)
+    for seed in range(3):  # several overwrite rounds: replay must keep order
+        cl.push(keys, rand_rows(200, seed), unpin=False)
+    want = cl.pull(keys, pin=False)
+    cl.kill_node(0)
+    assert cl.recover_node(0)
+    np.testing.assert_array_equal(cl.pull(keys, pin=False), want)
+    assert cl.fault_counters["node_recoveries"] == 1
+    assert cl.fault_counters["rows_replayed"] > 0
+
+
+def test_recover_without_redo_raises(tmp_path):
+    cl = make_cluster(tmp_path)  # redo off by default
+    cl.push(np.arange(10, dtype=np.uint64), rand_rows(10), unpin=False)
+    cl.kill_node(0)
+    with pytest.raises(NodeDownError):
+        cl.recover_node(0)
+
+
+# -------------------------------------------- SSD corruption + healing
+
+
+def _corrupt_one_local_file(cl, mode="flip"):
+    """Damage one non-retained parameter file; returns its path."""
+    for node in cl.nodes:
+        for meta in node.ssd.files.values():
+            if node.ssd.is_retained(meta.path):
+                continue
+            if mode == "drop":
+                os.remove(meta.path)
+            elif mode == "truncate":
+                size = os.path.getsize(meta.path)
+                with open(meta.path, "r+b") as f:
+                    f.truncate(size // 2)
+            else:  # flip payload bytes, length/header intact
+                with open(meta.path, "r+b") as f:
+                    f.seek(-4, os.SEEK_END)
+                    f.write(b"\xde\xad\xbe\xef")
+            return meta.path
+    raise AssertionError("no local (non-retained) file to corrupt")
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate", "drop"])
+def test_checksum_quarantines_and_heals_from_init_plus_redo(tmp_path, mode):
+    """A cluster born empty heals a lost file bit-exactly from the
+    deterministic initializer + full redo replay."""
+    cl = make_cluster(tmp_path, n=1)
+    cl.enable_redo()
+    pin = cl.pin_redo()  # pin at genesis: keep the FULL log (covers index 0)
+    keys = np.arange(120, dtype=np.uint64)
+    rows = rand_rows(120, 3)
+    cl.push(keys, rows, unpin=False)
+    try:
+        cl.flush_all()
+        _corrupt_one_local_file(cl, mode)
+        got = cl.nodes[0].ssd.read_batch(keys)  # detect -> quarantine -> heal
+        np.testing.assert_array_equal(got, rows)
+        assert cl.fault_counters["ssd_files_quarantined"] == 1
+        assert cl.fault_counters["ssd_rows_healed"] > 0
+        assert cl.fault_counters["ssd_rows_reinit"] == 0
+    finally:
+        cl.release_redo(pin)
+
+
+def test_corruption_heals_from_snapshot_plus_redo(tmp_path):
+    """After a publish, healing uses snapshot(version) as the base and
+    replays only the post-pin redo suffix — bit-exact current values."""
+    cl = make_cluster(tmp_path, n=1)
+    cl.enable_redo()
+    keys = np.arange(150, dtype=np.uint64)
+    base = rand_rows(150, 4)
+    cl.push(keys, base, unpin=False)
+    pub = SnapshotPublisher(cl, str(tmp_path / "snap"))
+    pub.publish()  # pins the redo suffix; sets the heal source
+    upd = rand_rows(60, 5)
+    cl.push(keys[40:100], upd, unpin=False)  # post-snapshot updates
+    cl.flush_all()
+    want = base.copy()
+    want[40:100] = upd
+    _corrupt_one_local_file(cl, "flip")
+    got = cl.nodes[0].ssd.read_batch(keys)
+    np.testing.assert_array_equal(got, want)
+    assert cl.fault_counters["ssd_files_quarantined"] == 1
+    assert cl.fault_counters["ssd_rows_healed"] > 0
+
+
+def test_unhealable_corruption_degrades_to_initializer(tmp_path):
+    """No redo, no snapshot: the quarantined rows re-serve deterministic
+    init values (counted), and garbage is never returned."""
+    cl = make_cluster(tmp_path, n=1)  # redo off
+    keys = np.arange(90, dtype=np.uint64)
+    cl.push(keys, rand_rows(90, 6), unpin=False)
+    cl.flush_all()
+    _corrupt_one_local_file(cl, "flip")
+    got = cl.nodes[0].ssd.read_batch(keys)
+    assert np.isfinite(got).all()
+    assert cl.fault_counters["ssd_files_quarantined"] == 1
+    assert cl.fault_counters["ssd_rows_reinit"] > 0
+    # the reinit rows equal what a fresh read of never-written keys returns
+    fresh = cl.nodes[0].ssd.init_rows(np.array([10**9], dtype=np.uint64))
+    assert np.isfinite(fresh).all()
+
+
+def test_injected_drop_skips_snapshot_retained_files(tmp_path):
+    """The injector models replicated snapshot storage: a scheduled drop
+    never lands on a retained file (it would destroy the heal base that
+    real deployments keep on durable remote storage)."""
+    cl = make_cluster(tmp_path, n=1)
+    cl.enable_redo()
+    keys = np.arange(80, dtype=np.uint64)
+    cl.push(keys, rand_rows(80, 7), unpin=False)
+    pub = SnapshotPublisher(cl, str(tmp_path / "snap"))
+    pub.publish()
+    retained = {m.path for m in cl.nodes[0].ssd.files.values()
+                if cl.nodes[0].ssd.is_retained(m.path)}
+    assert retained, "publish must retain the flushed files"
+    inj = FaultInjector([FaultSpec(SSD_DROP, at_op=1)]).arm(cl)
+    cl.push(keys[:40], rand_rows(40, 8), unpin=False)
+    cl.flush_all()  # a local-only (non-retained) file now exists
+    got = cl.nodes[0].ssd.read_batch(keys)  # file reads fire the injector
+    assert np.isfinite(got).all()
+    dropped = [f["path"] for f in inj.fired if f["kind"] == SSD_DROP]
+    assert dropped and all(p not in retained for p in dropped)
+
+
+# ------------------------------------------------------ elastic reshard
+
+
+def test_reshard_recovers_dead_node_instead_of_dropping_rows(tmp_path):
+    cl = make_cluster(tmp_path, n=3)
+    cl.enable_redo()
+    keys = np.arange(300, dtype=np.uint64)
+    rows = rand_rows(300, 9)
+    cl.push(keys, rows, unpin=False)
+    cl.kill_node(1)
+    new = elastic.reshard(cl, 2, str(tmp_path / "ps2"))
+    np.testing.assert_array_equal(new.pull(keys, pin=False), rows)
+
+
+def test_reshard_with_unrecoverable_dead_node_raises_with_row_count(tmp_path):
+    cl = make_cluster(tmp_path, n=3)  # no redo -> unrecoverable
+    keys = np.arange(300, dtype=np.uint64)
+    cl.push(keys, rand_rows(300, 10), unpin=False)
+    cl.flush_all()
+    at_risk = cl.nodes[1].ssd.n_live_rows
+    cl.kill_node(1)
+    with pytest.raises(NodeDownError, match=f">= {at_risk} rows"):
+        elastic.reshard(cl, 2, str(tmp_path / "ps2"))
+
+
+def test_reshard_live_replays_mid_copy_traffic_bit_exact(tmp_path, monkeypatch):
+    """Pushes that land *during* the bulk copy (post-pin, post-flush: in
+    MEM + redo suffix only) must reach the new cluster via the gated delta
+    replay — the new shards end bit-identical to the old cluster."""
+    cl = make_cluster(tmp_path, n=2)
+    cl.enable_redo()
+    keys = np.arange(256, dtype=np.uint64)
+    rows = rand_rows(256, 11)
+    cl.push(keys, rows, unpin=False)
+    mid = rand_rows(64, 12)
+    real_copy = elastic._bulk_copy
+
+    def copy_with_traffic(cluster, new, n):
+        moved = real_copy(cluster, new, n)
+        cluster.push(keys[100:164], mid, unpin=False)  # races the copy
+        return moved
+
+    monkeypatch.setattr(elastic, "_bulk_copy", copy_with_traffic)
+    new, info = elastic.reshard_live(cl, 3, str(tmp_path / "ps3"))
+    assert info["delta_rows"] > 0 and info["gap_s"] >= 0.0
+    want = rows.copy()
+    want[100:164] = mid
+    np.testing.assert_array_equal(new.pull(keys, pin=False), want)
+    np.testing.assert_array_equal(cl.pull(keys, pin=False), want)
+
+
+def test_paused_writes_block_then_resume(tmp_path):
+    cl = make_cluster(tmp_path)
+    keys = np.arange(10, dtype=np.uint64)
+    cl.pause_writes()
+    import threading
+
+    done = threading.Event()
+
+    def writer():
+        cl.push(keys, rand_rows(10, 13), unpin=False)
+        done.set()
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    assert not done.wait(0.1), "push must block while the gate is closed"
+    cl.resume_writes()
+    assert done.wait(5.0), "push must complete once writes resume"
+    t.join()
+
+
+# ------------------------------------------------------ serving failover
+
+
+def _published(tmp_path):
+    cluster = Cluster(2, str(tmp_path / "train"), dim=DIM,
+                      cache_capacity=1024, file_capacity=64)
+    PSClient(cluster, [TableSpec("emb", RowSchema.embedding(DIM))])
+    keys = np.arange(200, dtype=np.uint64)
+    rows = rand_rows(200, 14)
+    cluster.push(keys, rows, unpin=False)
+    pub = SnapshotPublisher(cluster, str(tmp_path / "snap"))
+    v = pub.publish()
+    return cluster, pub, keys, rows, v
+
+
+def test_serving_fails_over_to_surviving_replica(tmp_path):
+    cluster, pub, keys, rows, v = _published(tmp_path)
+    primary = ServingCluster(pub.dir, version=v)
+    replica = ServingCluster(pub.dir, version=v)
+    eng = ServingEngine(primary, cache_rows=256, fallbacks=[replica])
+    q = keys[:50]
+    want = eng.lookup("emb", q)
+    np.testing.assert_array_equal(want, rows[:50])
+    primary.kill()
+    got = eng.lookup("emb", keys[50:120])  # cold keys -> failover path
+    np.testing.assert_array_equal(got, rows[50:120])
+    assert eng.counters["failovers"] >= 1
+    assert eng.counters["failover_rows"] >= 70
+    # hot rows cached before the kill still serve (cache, no source touch)
+    np.testing.assert_array_equal(eng.lookup("emb", q), rows[:50])
+
+
+def test_failover_rows_never_poison_the_cache(tmp_path):
+    """Rows served by a fallback replica must not be cached under the
+    primary's version key: after the primary revives, a hot hit must be
+    bit-identical to a cold primary pull."""
+    cluster, pub, keys, rows, v = _published(tmp_path)
+    primary = ServingCluster(pub.dir, version=v)
+    replica = ServingCluster(pub.dir, version=v)
+    eng = ServingEngine(primary, cache_rows=256, fallbacks=[replica])
+    primary.kill()
+    q = keys[:60]
+    np.testing.assert_array_equal(eng.lookup("emb", q), rows[:60])
+    hits_before = eng.counters["hot_hits"]
+    primary.roll_forward(v)  # replacement replica on the same version
+    assert primary.alive
+    np.testing.assert_array_equal(eng.lookup("emb", q), rows[:60])
+    # the failover rows were NOT hot hits — they were re-pulled cold
+    assert eng.counters["hot_hits"] == hits_before
+
+
+def test_all_replicas_down_raises(tmp_path):
+    cluster, pub, keys, rows, v = _published(tmp_path)
+    primary = ServingCluster(pub.dir, version=v)
+    replica = ServingCluster(pub.dir, version=v)
+    eng = ServingEngine(primary, cache_rows=0, fallbacks=[replica])
+    primary.kill()
+    replica.kill()
+    with pytest.raises(NodeDownError):
+        eng.lookup("emb", keys[:10])
+    assert eng.counters["failed_lookups"] == 1
+
+
+def test_failover_across_version_roll(tmp_path):
+    """roll_forward moves primary AND fallbacks; a kill right after the
+    roll still fails over, on the new version's rows."""
+    cluster, pub, keys, rows, v1 = _published(tmp_path)
+    cluster.push(keys, rows * 2.0, unpin=False)
+    v2 = pub.publish()
+    primary = ServingCluster(pub.dir, version=v1)
+    replica = ServingCluster(pub.dir, version=v1)
+    eng = ServingEngine(primary, cache_rows=128, fallbacks=[replica])
+    assert eng.roll_forward(v2) == v2
+    assert replica.version == v2
+    primary.kill()
+    np.testing.assert_array_equal(eng.lookup("emb", keys[:30]), rows[:30] * 2.0)
+
+
+# --------------------------------------------- trainer ride-through
+
+
+def _chaos_cluster(tmp_path, tag):
+    return Cluster(2, str(tmp_path / tag), dim=TINY.emb_dim * 2,
+                   cache_capacity=2048, file_capacity=128,
+                   init_cols=TINY.emb_dim)
+
+
+def _stream():
+    return SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example,
+                              TINY.n_slots, TINY.batch_size, seed=5)
+
+
+def test_trainer_rides_through_node_kill_bitwise(tmp_path):
+    """Tentpole acceptance: kill an owner mid-pipeline; the trainer drains
+    in-flight batches, recovers the node (restart + redo replay), replays
+    the untrained suffix, resumes pipelining — and the final losses AND
+    flushed parameters are bitwise-equal to a fault-free run."""
+    clean_cl = _chaos_cluster(tmp_path, "clean")
+    clean = CTRTrainer(TINY, clean_cl, TrainerConfig())
+    want = [r["loss"] for r in clean.run(_stream(), 10)]
+    clean_cl.flush_all()
+    want_rows = clean_cl.pull(
+        np.arange(TINY.n_sparse_keys, dtype=np.uint64), pin=False)
+
+    chaos_cl = _chaos_cluster(tmp_path, "chaos")
+    tr = CTRTrainer(TINY, chaos_cl, TrainerConfig(ride_through=True))
+    inj = FaultInjector([FaultSpec(NODE_KILL, at_op=40, node_id=1)]).arm(chaos_cl)
+    got = [r["loss"] for r in tr.run(_stream(), 10)]
+    inj.disarm()
+    assert inj.all_fired(), "the kill must actually have happened"
+    assert tr.recovery_time_s > 0.0
+    assert chaos_cl.fault_counters["node_recoveries"] >= 1
+    np.testing.assert_array_equal(got, want)
+    chaos_cl.flush_all()
+    got_rows = chaos_cl.pull(
+        np.arange(TINY.n_sparse_keys, dtype=np.uint64), pin=False)
+    np.testing.assert_array_equal(got_rows, want_rows)
+    assert chaos_cl.total_pins() == 0 and tr.ps.n_inflight() == 0
+
+
+def test_trainer_without_ride_through_still_raises(tmp_path):
+    cl = _chaos_cluster(tmp_path, "hard")
+    tr = CTRTrainer(TINY, cl, TrainerConfig())  # ride_through off
+    FaultInjector([FaultSpec(NODE_KILL, at_op=40, node_id=0)]).arm(cl)
+    with pytest.raises(Exception):
+        tr.run(_stream(), 10)
+    assert cl.total_pins() == 0, "failure path must still release pins"
+
+
+def test_trainer_survives_two_kills(tmp_path):
+    cl = _chaos_cluster(tmp_path, "twice")
+    tr = CTRTrainer(TINY, cl, TrainerConfig(ride_through=True))
+    inj = FaultInjector([
+        FaultSpec(NODE_KILL, at_op=30, node_id=0),
+        FaultSpec(NODE_KILL, at_op=70, node_id=1),
+    ]).arm(cl)
+    res = tr.run(_stream(), 12)
+    inj.disarm()
+    assert inj.all_fired()
+    assert len(res) == 12 and all(np.isfinite(r["loss"]) for r in res)
+    assert cl.fault_counters["node_recoveries"] >= 2

@@ -206,6 +206,36 @@ def test_partial_pull_failure_rolls_back_pins(tmp_path):
     assert cl2.total_pins() == 32  # only the first pull's pins remain
 
 
+def test_owner_kill_mid_batch_drains_and_replays_bitwise(tmp_path):
+    """Full ride-through of the scenario above (DESIGN.md §9): an owner
+    node dies mid-batch under *pipelined* training. The trainer must drain
+    the in-flight batches (trained prefix's deferred pushes land, untrained
+    remainder unpinned), recover the node (restart + redo replay), replay
+    the untrained batches, and resume — with losses bitwise-equal to a
+    fault-free run and zero leaked pins or in-flight entries."""
+    from repro.core.faults import NODE_KILL, FaultInjector, FaultSpec
+
+    def run(tag, schedule):
+        cl = Cluster(2, str(tmp_path / tag), dim=TINY.emb_dim * 2,
+                     cache_capacity=2048, file_capacity=128,
+                     init_cols=TINY.emb_dim)
+        tr = CTRTrainer(TINY, cl, TrainerConfig(ride_through=True))
+        inj = FaultInjector(schedule).arm(cl)
+        s = SyntheticCTRStream(TINY.n_sparse_keys, TINY.nnz_per_example,
+                               TINY.n_slots, TINY.batch_size, seed=5)
+        losses = [r["loss"] for r in tr.run(s, 8, pipelined=True)]
+        inj.disarm()
+        return losses, tr, cl, inj
+
+    want, *_ = run("clean", [])
+    got, tr, cl, inj = run("chaos", [FaultSpec(NODE_KILL, at_op=25, node_id=1)])
+    assert inj.all_fired(), "the owner kill must actually have happened"
+    assert cl.fault_counters["node_recoveries"] >= 1
+    np.testing.assert_array_equal(got, want)
+    assert cl.total_pins() == 0, "drain+replay leaked pins"
+    assert tr.ps.n_inflight() == 0, "drain+replay leaked in-flight entries"
+
+
 def test_eval_prepare_does_not_taint_device_residency(tmp_path):
     """The train_ctr_e2e.py flow: an eval-style prepare_batch + abort_batch
     between training runs must not leave the registry believing those keys
