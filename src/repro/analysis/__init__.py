@@ -1,0 +1,41 @@
+"""pscheck: project-specific invariant lint + concurrency sanitizer.
+
+Static half (``python -m repro.analysis.check src/``, stdlib ``ast`` only):
+
+====== ==============================================================
+rule   invariant
+====== ==============================================================
+PS101  pin/unpin balance: pin-acquiring functions must release on
+       every exit path (try/except/finally) or be pragma'd as
+       ownership-transferring
+PS201  lock discipline: ``with self._lock`` nesting must follow the
+       declared order table (``repro.analysis.locks.LOCK_ORDER``)
+PS202  no blocking call (cluster.pull, NetworkModel.transfer, file
+       I/O, sleep/join/wait) while holding a lock whose spec says
+       ``blocking_ok=False``
+PS301  no silent degradation: broad ``except`` must re-raise, use the
+       bound exception, or count/log — never swallow NodeDownError /
+       SSDCorruptionError
+PS302  Pallas wrappers must not fall back to the reference kernel on
+       shape/dtype conditions without a counter or warning (the PR-5
+       Adagrad bug class)
+PS401  counter hygiene: ``Counters.inc`` / ctor names must come from
+       ``repro.metrics.KNOWN_COUNTERS``
+PS501  no ``jnp.take`` / ``jax.nn.one_hot`` embedding paths in
+       production forwards under ``models/``
+PS502  every ``pl.pallas_call`` must pass explicit BlockSpecs
+       (in_specs/out_specs or a grid_spec) and a grid
+====== ==============================================================
+
+Suppression: append ``# pscheck: ok PSxxx <reason>`` to the finding's
+line (or the enclosing ``def`` line), or add ``PSxxx path::qualname``
+to ``pscheck_baseline.txt`` for grandfathered cases.
+
+Runtime half (``repro.analysis.sanlock``, enabled by ``REPRO_SANLOCK=1``):
+wraps ``threading.Lock``/``RLock`` allocated inside ``src/repro`` and
+records the actual lock-acquisition graph while tier-1 tests run; the
+conftest fixture fails any test session whose graph has a cycle, and
+asserts ``Cluster.total_pins() == 0`` at teardown (DESIGN.md §10).
+"""
+
+from repro.analysis.rules import Finding, run_rules  # noqa: F401

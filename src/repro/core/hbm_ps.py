@@ -425,6 +425,9 @@ class DeviceHotSet:
         self.capacity = int(capacity)
         self.row_bytes = int(row_bytes)
         self.stats = HotSetStats()
+        self.generation = 0  # bumped on every resident-set mutation; lets
+        # callers release their lock across the host pull and detect a
+        # concurrent admit/reset before assembling against a stale plan
         self._version: int | None = None
         self._keys: np.ndarray | None = None  # sorted unique resident keys
         self._freq: np.ndarray | None = None  # int64, aligned with _keys
@@ -435,6 +438,7 @@ class DeviceHotSet:
         return 0 if self._keys is None else len(self._keys)
 
     def reset(self) -> None:
+        self.generation += 1
         self._version = None
         self._keys = None
         self._freq = None
@@ -503,6 +507,7 @@ class DeviceHotSet:
                 r_idx = np.nonzero(rest)[0]
                 tbl = tbl.at[jnp.asarray(r_idx)].set(self._table[jnp.asarray(p_old)])
         self._keys, self._freq, self._table = cand, freq, tbl
+        self.generation += 1
 
     def assemble_and_admit(self, fresh_rows: jax.Array, plan: HotPlan) -> jax.Array:
         table = self.assemble(fresh_rows, plan)

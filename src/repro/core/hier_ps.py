@@ -49,6 +49,7 @@ from the *actual* in-flight window, not a hardcoded token-discard distance.
 
 from __future__ import annotations
 
+import sys
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -247,6 +248,7 @@ class HierarchicalPS:
             # (a leaked seq would hold the token floor back forever)
             self._preparing.add(seq)
 
+        pinned_fresh = None  # keys pinned by the pull, until entry owns them
         try:
             # keys of the previous prepared batch are served from the
             # device-resident HBM-PS copy: no host value, no waiting — the
@@ -266,6 +268,7 @@ class HierarchicalPS:
                 # push landed): the pulled buffer is freshly allocated per
                 # batch, so the working set views straight into it
                 rows = self.cluster.pull(uniq, requester=requester, pin=True)
+                pinned_fresh = uniq[fresh]
             else:
                 rows = np.zeros((n, self.cluster.dim), dtype=np.float32)
                 if n_fresh:
@@ -273,20 +276,25 @@ class HierarchicalPS:
                     rows[fresh] = self.cluster.pull(
                         uniq[fresh], requester=requester, pin=True
                     )
+                    pinned_fresh = uniq[fresh]
+            ws = WorkingSet(
+                keys=uniq,
+                params=rows[:, : self.emb_dim],
+                opt_state=rows[:, self.emb_dim : self.width],
+                slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
+                batch_id=seq,
+            )
+            entry = _InFlight(seq=seq, ws=ws, requester=requester, ext_id=batch_id)
+            if pinned_fresh is not None:
+                entry.pinned.append(pinned_fresh)
         except BaseException:
+            # pscheck PS101: the pull takes pins before the in-flight entry
+            # exists to own them — release here or they leak forever
             with self._lock:
                 self._preparing.discard(seq)
+            if pinned_fresh is not None:
+                self.cluster.unpin(pinned_fresh)
             raise
-        ws = WorkingSet(
-            keys=uniq,
-            params=rows[:, : self.emb_dim],
-            opt_state=rows[:, self.emb_dim : self.width],
-            slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
-            batch_id=seq,
-        )
-        entry = _InFlight(seq=seq, ws=ws, requester=requester, ext_id=batch_id)
-        if n_fresh:
-            entry.pinned.append(uniq[fresh])
         with self._lock:
             self._inflight[seq] = entry
             self._preparing.discard(seq)
@@ -326,7 +334,7 @@ class HierarchicalPS:
                 self._last_prepared_seq = -1
         return ws
 
-    def _resolve_conflicts(
+    def _resolve_conflicts(  # pscheck: ok PS101 caller wraps with _forget(unpin=True)
         self,
         entry: _InFlight,
         uniq: np.ndarray,
@@ -494,12 +502,21 @@ class HierarchicalPS:
                 self._ext_to_seq.clear()
                 self._last_prepared_keys = None  # residency ends with the run
                 self._last_prepared_seq = -1
+            # pscheck PS101: one entry's unpin failing must not leak the
+            # rest — attempt every release, then surface the first error
+            # only if it would not mask an already-propagating exception
+            unpin_errs: list[BaseException] = []
             for entry in remaining:
                 self.deps.signal(self._trained_token(entry.seq))  # wake waiters
                 for keys in entry.pinned:
-                    self.cluster.unpin(keys)
+                    try:
+                        self.cluster.unpin(keys)
+                    except Exception as err:
+                        unpin_errs.append(err)
             with self._lock:
                 self.deps.set_floor(self._token_family, self._floor_bound_locked())
+            if unpin_errs and sys.exc_info()[0] is None:
+                raise unpin_errs[0]
 
     def abort_batch(self, ws: WorkingSet) -> None:
         """Unpin without applying (failure path)."""
@@ -516,8 +533,14 @@ class HierarchicalPS:
         with self._lock:
             self.deps.set_floor(self._token_family, self._floor_bound_locked())
         pinned = entry.pinned if entry is not None else [ws.keys]
-        for keys in pinned:
-            self.cluster.unpin(keys)
+        unpin_errs: list[BaseException] = []
+        for keys in pinned:  # release every group even if one owner is down
+            try:
+                self.cluster.unpin(keys)
+            except Exception as err:
+                unpin_errs.append(err)
+        if unpin_errs:
+            raise unpin_errs[0]
 
     def _forget(self, entry: _InFlight, unpin: bool) -> None:
         with self._lock:

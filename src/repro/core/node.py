@@ -145,7 +145,7 @@ class PSNode:
             raise NodeDownError(f"node {self.node_id} is down")
         self.mem.push(keys, values, unpin=unpin)
 
-    def pin(self, keys: np.ndarray) -> None:
+    def pin(self, keys: np.ndarray) -> None:  # pscheck: ok PS101 RPC shim: pin ownership stays with the Cluster caller
         if self.faults is not None:
             self.faults.on_node_op(self, "pin")
         if not self.alive:
@@ -230,6 +230,10 @@ class Cluster:
             self.register_tables(tables)
         self.pull_local_time = 0.0
         self.pull_remote_time = 0.0
+        # the SanLock sanitizer (REPRO_SANLOCK=1) asserts total_pins()==0 at
+        # test teardown for every cluster; registration is a weakref append
+        from repro.analysis import sanlock
+        sanlock.register_cluster(self)
 
     def _wire_node(self, node: PSNode) -> None:
         """Attach the cluster's fault-model plumbing to one node's SSD:

@@ -152,7 +152,7 @@ class SSDParameterServer:
         self.heal_fn = None
         self.faults = None
         self._in_compact = False
-        self._lock = threading.RLock() if lock else threading.RLock()
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ io
     def _file_path(self, file_id: int) -> str:
@@ -331,7 +331,10 @@ class SSDParameterServer:
             except SSDCorruptionError:
                 raise  # a snapshot view hit corruption too: let reader retry
             except Exception:
-                healed = None  # heal source unavailable -> degraded serving
+                # heal source unavailable -> degraded (deterministic reinit)
+                # serving; counted so the degradation is never silent
+                healed = None
+                self.counters.inc("ssd_heal_degraded")
         if healed is not None:
             self.write_batch(lost, np.asarray(healed, dtype=np.float32))
             self.counters.inc("ssd_rows_healed", int(lost.size))

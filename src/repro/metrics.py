@@ -2,9 +2,37 @@
 
 from __future__ import annotations
 
+import os
 import threading
 
 import numpy as np
+
+# Every production counter name, in one place. pscheck rule PS401 parses
+# this set (via ast, without importing) and flags any ``Counters.inc`` /
+# ``Counters(...)`` literal not listed here, so a typo'd name can never
+# silently mint a new counter that no bench or test ever reads. Runtime
+# strict mode (REPRO_SANLOCK=1 / REPRO_STRICT_COUNTERS=1) enforces the
+# same contract on dynamically-built names.
+KNOWN_COUNTERS = frozenset({
+    # serving engine (serve/engine.py COUNTER_NAMES)
+    "lookups", "coalesced_requests", "merged_pulls",
+    "hot_hits", "hot_misses", "device_rows_reused", "rows_served",
+    "version_rolls", "failovers", "failover_rows", "failed_lookups",
+    "replica_errors",
+    # SSD-PS integrity (core/ssd_ps.py)
+    "ssd_files_quarantined", "ssd_rows_quarantined",
+    "ssd_rows_healed", "ssd_rows_reinit", "ssd_heal_degraded",
+    # node recovery (core/node.py fault_counters)
+    "node_recoveries", "rows_replayed",
+    # NIC wire quantization (core/node.py NetworkModel via add_from)
+    "quantized_messages", "quantize_bytes_saved",
+})
+
+
+def _strict_default() -> bool:
+    return bool(
+        os.environ.get("REPRO_SANLOCK") or os.environ.get("REPRO_STRICT_COUNTERS")
+    )
 
 
 class Counters:
@@ -15,15 +43,24 @@ class Counters:
     and tests assert on counter values instead of scraping ad-hoc prints.
     Names passed to the constructor are pre-registered at 0 so a
     ``snapshot()`` always shows the full schema; ``inc`` accepts new names
-    too (they appear once first incremented).
+    too (they appear once first incremented) — unless strict mode is on
+    (``REPRO_SANLOCK``/``REPRO_STRICT_COUNTERS``, or ``strict=True``), in
+    which case a name neither pre-registered nor in :data:`KNOWN_COUNTERS`
+    raises instead of silently minting a counter.
     """
 
-    def __init__(self, *names: str):
+    def __init__(self, *names: str, strict: bool | None = None):
         self._lock = threading.Lock()
         self._c: dict[str, int] = {n: 0 for n in names}
+        self._strict = _strict_default() if strict is None else bool(strict)
 
     def inc(self, name: str, n: int = 1) -> None:
         with self._lock:
+            if self._strict and name not in self._c and name not in KNOWN_COUNTERS:
+                raise ValueError(
+                    f"unknown counter {name!r}: declare it in "
+                    "repro.metrics.KNOWN_COUNTERS (or the constructor)"
+                )
             self._c[name] = self._c.get(name, 0) + int(n)
 
     def __getitem__(self, name: str) -> int:

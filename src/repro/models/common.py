@@ -201,5 +201,10 @@ def set_embed_gather_fn(fn) -> None:
 
 def embed_gather(table: jax.Array, ids: jax.Array) -> jax.Array:
     if _EMBED_GATHER_FN is None:
-        return jnp.take(table, ids, axis=0)
+        # single-host default: the kernel-layer lookup (Pallas row-gather on
+        # TPU, jnp.take-equivalent reference elsewhere — bitwise identical)
+        from repro.kernels import ops as kops
+
+        flat = kops.embedding_lookup(table, ids.reshape(-1))
+        return flat.reshape(*ids.shape, table.shape[-1])
     return _EMBED_GATHER_FN(table, ids)

@@ -77,7 +77,7 @@ def moe_block(
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
 
     # load-balancing aux loss (Switch): E * sum_e f_e * P_e
-    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)  # pscheck: ok PS501 router load stats over E experts, not an embedding gather
     router_prob = jnp.mean(probs, axis=0)
     aux = E * jnp.sum(density * router_prob)
 
@@ -85,7 +85,7 @@ def moe_block(
     # slice: ranks reset at group boundaries so dispatch is group-local
     flat_e = top_i.reshape(-1)  # [T*k], token-major
     Tg = T * k // G
-    onehot = jax.nn.one_hot(flat_e.reshape(G, Tg), E, dtype=jnp.int32)  # [G,Tg,E]
+    onehot = jax.nn.one_hot(flat_e.reshape(G, Tg), E, dtype=jnp.int32)  # [G,Tg,E]  # pscheck: ok PS501 capacity-rank mask over E experts, not an embedding gather
     pos = jnp.cumsum(onehot, axis=1) - 1  # running count per (group, expert)
     pos_of = jnp.take_along_axis(pos, flat_e.reshape(G, Tg, 1), axis=2)[..., 0]
     keep = (pos_of < C).reshape(-1)
@@ -112,7 +112,9 @@ def moe_block(
     # gather back to (token, k) order and combine with routing weights
     y_flat = y.astype(DISPATCH_DTYPE).reshape(E * G * C, d)
     y_tok = jnp.where(
-        keep[:, None], jnp.take(y_flat, jnp.minimum(slot, E * G * C - 1), axis=0), 0.0
+        keep[:, None],
+        jnp.take(y_flat, jnp.minimum(slot, E * G * C - 1), axis=0),  # pscheck: ok PS501 activation un-dispatch (expert buffer -> token order), not a parameter-table gather
+        0.0,
     )
     y_tok = y_tok.reshape(T, k, d)
     out = jnp.einsum("tkd,tk->td", y_tok.astype(jnp.float32), top_p).astype(x.dtype)

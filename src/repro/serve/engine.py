@@ -56,6 +56,7 @@ COUNTER_NAMES = (
     "failovers",
     "failover_rows",
     "failed_lookups",
+    "replica_errors",
 )
 
 
@@ -311,7 +312,10 @@ class ServingEngine:
                 try:
                     rows = fb.pull(keys, view=fb.acquire())
                 except Exception:
-                    continue  # this replica is gone too; try the next
+                    # this replica is gone too; try the next — but count the
+                    # skip so replica loss is never silent (pscheck PS301)
+                    self.counters.inc("replica_errors")
+                    continue
                 self.counters.inc("failovers")
                 self.counters.inc("failover_rows", len(keys))
                 return rows, False
@@ -455,23 +459,32 @@ class ServingEngine:
         if self._device_hot_rows <= 0:
             rows = self._rows_for(view, uniq)[:, :emb]
             return slots, jnp.asarray(rows)
-        # one lock around the plan/assemble/admit triple: a concurrent
-        # admit() swapping the resident table between another thread's
+        # An admit() swapping the resident table between another thread's
         # plan() and assemble() would gather rows by stale indices — jnp
         # clamps out-of-bounds gathers, so that bug would serve wrong rows
-        # silently, not raise
-        with self._dev_mu:
-            dev = self._dev.get(table)
-            if dev is None:
-                dev = self._dev[table] = DeviceHotSet(self._device_hot_rows, emb * 4)
-            plan = dev.plan(uniq, view.version)
-            self.counters.inc("device_rows_reused", plan.n_reused)
+        # silently, not raise. But the host pull blocks on SSD/NIC work,
+        # so it must NOT run under _dev_mu (pscheck PS202): instead plan
+        # under the lock, pull outside it, and re-check the hot set's
+        # generation before assembling — a concurrent mutation just replans
+        # (the second pass usually reuses the first pull's rows from the
+        # hot cache, so the retry is cheap).
+        while True:
+            with self._dev_mu:
+                dev = self._dev.get(table)
+                if dev is None:
+                    dev = self._dev[table] = DeviceHotSet(self._device_hot_rows, emb * 4)
+                plan = dev.plan(uniq, view.version)
+                gen = dev.generation
             if len(plan.fresh_dst):
                 host = self._rows_for(view, uniq[plan.fresh_dst])[:, :emb]
             else:
                 host = np.empty((0, emb), dtype=np.float32)
-            table_dev = dev.assemble_and_admit(jnp.asarray(host), plan)
-        return slots, table_dev
+            with self._dev_mu:
+                if dev.generation != gen:
+                    continue  # raced with another lookup's admit: replan
+                self.counters.inc("device_rows_reused", plan.n_reused)
+                table_dev = dev.assemble_and_admit(jnp.asarray(host), plan)
+            return slots, table_dev
 
     def device_hot_stats(self, table: str):
         dev = self._dev.get(table)

@@ -1,8 +1,20 @@
 import os
+import sys
 
 # Smoke tests and benches must see ONE device; only launch/dryrun.py forces
 # 512 placeholder devices (and only in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_SANLOCK = bool(os.environ.get("REPRO_SANLOCK"))
+if _SANLOCK:
+    # Patch the threading lock factories BEFORE any repro module allocates
+    # a lock (sanlock only wraps locks constructed under src/repro), so the
+    # runtime lock-order sanitizer sees every product lock for the whole
+    # tier-1 run. See repro.analysis.sanlock / DESIGN.md §10.
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.analysis import sanlock
+
+    sanlock.install()
 
 import numpy as np
 import pytest
@@ -11,6 +23,32 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _pscheck_sanitizers(request):
+    """REPRO_SANLOCK=1: after every test, fail if the recorded
+    lock-acquisition graph has a cycle (potential deadlock between the
+    pipeline/serving threads) or a cluster created by this test still
+    holds MEM-PS row pins (``pscheck_allow_pins`` marks intentional
+    leaks). The graph accumulates across the whole session on purpose:
+    cross-test edges are real edges."""
+    if not _SANLOCK:
+        yield
+        return
+    from repro.analysis import sanlock
+
+    mark = sanlock.cluster_mark()
+    yield
+    cycle = sanlock.find_cycle()
+    assert cycle is None, (
+        "SanLock: lock-acquisition cycle (potential deadlock): "
+        + " -> ".join(cycle)
+    )
+    if request.node.get_closest_marker("pscheck_allow_pins") is None:
+        leaks = sanlock.pin_leaks(mark)
+        assert not leaks, f"residual MEM-PS pins at teardown: {leaks}"
+    sanlock.prune_dead_clusters()
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,348 @@
+"""Self-tests for pscheck (repro.analysis): each rule must catch its
+known-bad fixture and stay quiet on the known-good one, the live tree must
+be clean modulo the checked-in baseline, and the SanLock runtime sanitizer
+must detect lock cycles and residual pins."""
+
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanlock
+from repro.analysis.check import (
+    REPO_ROOT,
+    check_paths,
+    load_baseline,
+    main as check_main,
+)
+from repro.analysis.rules import run_rules
+from repro.core.node import Cluster
+
+REG = frozenset({"lookups", "hot_hits"})
+
+
+def rules_of(src, path="src/repro/core/fake.py", registry=REG):
+    fs = run_rules(textwrap.dedent(src), path, registry=registry)
+    return [f.rule for f in fs]
+
+
+# ------------------------------------------------------------------ PS101
+def test_ps101_flags_pin_without_release_path():
+    bad = """
+    class Engine:
+        def grab(self, keys):
+            rows = self.cluster.pull(keys, pin=True)
+            return rows
+    """
+    assert "PS101" in rules_of(bad)
+
+
+def test_ps101_accepts_release_handler_and_redo_cursors():
+    good = """
+    class Engine:
+        def grab(self, keys):
+            rows = self.cluster.pull(keys, pin=True)
+            try:
+                return self.wrap(rows)
+            except Exception:
+                self.cluster.unpin(keys)
+                raise
+
+        def cursor(self):
+            return self.redo.pin()  # redo-log cursor, not a row pin
+    """
+    assert "PS101" not in rules_of(good)
+
+
+# ----------------------------------------------------------- PS201 / PS202
+def test_ps201_flags_order_violation_and_undeclared_lock():
+    bad_order = """
+    class ServingEngine:
+        def bad(self):
+            with self._cache_mu:
+                with self._mu:
+                    pass
+    """
+    assert "PS201" in rules_of(bad_order)
+    undeclared = """
+    class Widget:
+        def f(self):
+            with self._zzz_mu:
+                pass
+    """
+    assert "PS201" in rules_of(undeclared)
+
+
+def test_ps201_accepts_declared_order():
+    good = """
+    class ServingEngine:
+        def good(self):
+            with self._mu:
+                with self._cache_mu:
+                    pass
+    """
+    assert "PS201" not in rules_of(good)
+
+
+def test_ps202_flags_blocking_call_under_strict_lock():
+    bad = """
+    class ServingEngine:
+        def bad(self, keys):
+            with self._mu:
+                return self.source.pull(keys)
+    """
+    assert "PS202" in rules_of(bad)
+
+
+def test_ps202_flags_transitively_blocking_helper():
+    bad = """
+    class ServingEngine:
+        def helper(self, keys):
+            return self.source.pull(keys)
+
+        def bad(self, keys):
+            with self._mu:
+                return self.helper(keys)
+    """
+    assert "PS202" in rules_of(bad)
+
+
+def test_ps202_accepts_pull_outside_lock_and_blocking_ok_locks():
+    good = """
+    class ServingEngine:
+        def good(self, keys):
+            rows = self.source.pull(keys)
+            with self._mu:
+                self.cache[0] = rows
+            return rows
+
+    class MemParameterServer:
+        def fill(self, keys):
+            with self._lock:  # blocking_ok: SSD miss-fill is its design
+                return self.ssd.read_batch(keys)
+    """
+    assert "PS202" not in rules_of(good)
+
+
+# ------------------------------------------------------------------ PS301
+def test_ps301_flags_swallowing_excepts():
+    for body in (
+        "try:\n    f()\nexcept Exception:\n    pass",
+        "try:\n    f()\nexcept:\n    x = 1",
+        "def g():\n    try:\n        f()\n    except NodeDownError:\n        pass",
+    ):
+        assert "PS301" in rules_of(body), body
+
+
+def test_ps301_accepts_loud_handlers():
+    good = """
+    def a():
+        try:
+            f()
+        except Exception:
+            raise
+
+    def b(log):
+        try:
+            f()
+        except Exception as err:
+            log.append(err)
+
+    def c(counters):
+        try:
+            f()
+        except Exception:
+            counters.inc("lookups")
+
+    def d():
+        try:
+            f()
+        except NodeDownError:
+            recover()
+    """
+    assert "PS301" not in rules_of(good)
+
+
+# ------------------------------------------------------------------ PS302
+def test_ps302_flags_silent_shape_fallback():
+    bad = """
+    def wrapper(x):
+        if x.shape[0] % 8:
+            return foo_ref(x)
+        return foo_pallas(x)
+    """
+    assert "PS302" in rules_of(bad)
+
+
+def test_ps302_accepts_explicit_dispatch_and_loud_fallback():
+    good = """
+    def dispatch(x, use_pallas):
+        if not use_pallas:
+            return foo_ref(x)
+        return foo_pallas(x)
+
+    def loud(x):
+        if x.shape[0] % 8:
+            warnings.warn("foo: ragged batch, reference fallback")
+            return foo_ref(x)
+        return foo_pallas(x)
+    """
+    assert "PS302" not in rules_of(good)
+
+
+# ------------------------------------------------------------------ PS401
+def test_ps401_flags_unregistered_and_dynamic_counter_names():
+    assert "PS401" in rules_of("self.counters.inc('nope')")
+    assert "PS401" in rules_of("self.counters.inc(name)")
+    assert "PS401" in rules_of("c = Counters('nope')")
+    assert "PS401" in rules_of("COUNTER_NAMES = ('nope',)")
+
+
+def test_ps401_accepts_registry_names():
+    src = """
+    COUNTER_NAMES = ("lookups", "hot_hits")
+    c = Counters("lookups")
+    c.inc("hot_hits", 2)
+    self.counters.inc("lookups")
+    """
+    assert "PS401" not in rules_of(src)
+
+
+# ------------------------------------------------------------------ PS501
+def test_ps501_flags_take_and_one_hot_only_under_models():
+    src = """
+    def fwd(table, ids):
+        a = jnp.take(table, ids, axis=0)
+        b = jax.nn.one_hot(ids, 100)
+        return a, b
+    """
+    assert rules_of(src, path="src/repro/models/fake.py").count("PS501") == 2
+    assert "PS501" not in rules_of(src, path="src/repro/core/fake.py")
+
+
+# ------------------------------------------------------------------ PS502
+def test_ps502_requires_explicit_specs():
+    bad = "y = pl.pallas_call(kernel, out_shape=s)(x)"
+    assert "PS502" in rules_of(bad)
+    good = """
+    y = pl.pallas_call(kernel, out_shape=s, grid=(8,),
+                       in_specs=[spec], out_specs=spec)(x)
+    z = pl.pallas_call(kernel, out_shape=s, grid_spec=gspec)(x)
+    """
+    assert "PS502" not in rules_of(good)
+
+
+# ------------------------------------------- suppression + CLI + live tree
+def test_pragma_suppresses_and_cli_exit_codes(tmp_path):
+    nobase = tmp_path / "empty_baseline.txt"
+    bad = tmp_path / "bad.py"
+    bad.write_text("try:\n    f()\nexcept Exception:\n    pass\n")
+    report = tmp_path / "report.txt"
+    rc = check_main([str(bad), "--baseline", str(nobase), "--report", str(report)])
+    assert rc == 1
+    assert "PS301" in report.read_text()
+
+    ok = tmp_path / "ok.py"
+    ok.write_text(
+        "try:\n    f()\n"
+        "except Exception:  # pscheck: ok PS301 fixture demonstrating pragmas\n"
+        "    pass\n"
+    )
+    assert check_main([str(ok), "--baseline", str(nobase)]) == 0
+
+
+def test_baseline_suppresses_by_rule_and_qualname(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text("def f():\n    try:\n        g()\n    except Exception:\n        pass\n")
+    findings, _, _ = check_paths([bad])
+    assert [f.rule for f in findings] == ["PS301"]
+    baseline = {findings[0].baseline_key()}
+    findings2, _, n_base = check_paths([bad], baseline=baseline)
+    assert findings2 == [] and n_base == 1
+
+
+def test_live_tree_clean_modulo_baseline():
+    baseline = load_baseline(REPO_ROOT / "pscheck_baseline.txt")
+    findings, _, _ = check_paths([REPO_ROOT / "src"], baseline=baseline)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# ------------------------------------------------------------- SanLock
+def _preserving_graph():
+    saved = dict(sanlock._edges)
+    sanlock.reset_graph()
+    return saved
+
+
+def _restore_graph(saved):
+    sanlock.reset_graph()
+    sanlock._edges.update(saved)
+
+
+def test_sanlock_detects_cycle_and_instance_granularity():
+    saved = _preserving_graph()
+    try:
+        a = sanlock._SanLock(threading.Lock(), "a.py:1")
+        b = sanlock._SanLock(threading.Lock(), "b.py:1")
+        with a:
+            with b:
+                pass
+        assert sanlock.find_cycle() is None
+        with b:
+            with a:  # reversed order: a->b->a cycle
+                pass
+        cyc = sanlock.find_cycle()
+        assert cyc is not None and "a.py:1" in cyc and "b.py:1" in cyc
+        with pytest.raises(AssertionError, match="cycle"):
+            sanlock.assert_acyclic()
+    finally:
+        _restore_graph(saved)
+
+    # instance-level graph: same allocation site, different instances (the
+    # SSD heal path: training shard lock -> snapshot-view lock) is NOT a
+    # self-cycle
+    saved = _preserving_graph()
+    try:
+        t1 = sanlock._SanLock(threading.Lock(), "ssd_ps.py:155")
+        t2 = sanlock._SanLock(threading.Lock(), "ssd_ps.py:155")
+        with t1:
+            with t2:
+                pass
+        assert sanlock.find_cycle() is None
+    finally:
+        _restore_graph(saved)
+
+
+def test_sanlock_reentrant_rlock_adds_no_edge():
+    saved = _preserving_graph()
+    try:
+        r = sanlock._SanRLock(threading.RLock(), "r.py:1")
+        with r:
+            with r:
+                pass
+        assert sanlock.find_cycle() is None and sanlock.edges() == []
+    finally:
+        _restore_graph(saved)
+
+
+def test_sanlock_pin_registry_tracks_cluster_pins(tmp_path):
+    mark = sanlock.cluster_mark()
+    cl = Cluster(1, str(tmp_path / "ps"), dim=8, cache_capacity=64,
+                 file_capacity=32, init_cols=4)
+    keys = np.arange(4, dtype=np.uint64)
+    cl.pull(keys, pin=True)
+    leaks = sanlock.pin_leaks(mark)
+    assert len(leaks) == 1 and leaks[0][1] == 4
+    cl.unpin(keys)
+    assert sanlock.pin_leaks(mark) == []
+
+
+@pytest.mark.pscheck_allow_pins
+def test_allow_pins_marker_opts_out_of_teardown_assert(tmp_path):
+    # under REPRO_SANLOCK=1 the autouse fixture would fail this test's
+    # teardown without the marker — the marker IS the assertion here
+    cl = Cluster(1, str(tmp_path / "ps"), dim=8, cache_capacity=64,
+                 file_capacity=32, init_cols=4)
+    cl.pull(np.arange(3, dtype=np.uint64), pin=True)
+    assert cl.total_pins() == 3

@@ -204,6 +204,8 @@ def test_partial_pull_failure_rolls_back_pins(tmp_path):
     with pytest.raises(MemoryError):
         cl2.pull(np.arange(100, 140, dtype=np.uint64), pin=True)
     assert cl2.total_pins() == 32  # only the first pull's pins remain
+    cl2.unpin(np.arange(32, dtype=np.uint64))
+    assert cl2.total_pins() == 0  # REPRO_SANLOCK asserts this at teardown
 
 
 def test_owner_kill_mid_batch_drains_and_replays_bitwise(tmp_path):

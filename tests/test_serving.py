@@ -403,13 +403,23 @@ def test_threaded_lookups_coalesce_and_match_per_stream(setup):
 
 
 def test_counters_schema_and_metrics_counters():
-    c = Counters("a", "b")
+    # strict=False: this test pins the dynamic-minting behavior, which
+    # strict mode (REPRO_SANLOCK / REPRO_STRICT_COUNTERS) forbids
+    c = Counters("a", "b", strict=False)
     assert c.snapshot() == {"a": 0, "b": 0}
     c.inc("a")
     c.inc("c", 5)
     assert c["a"] == 1 and c["c"] == 5
     c.reset()
     assert c.snapshot() == {"a": 0, "b": 0, "c": 0}
+
+
+def test_counters_strict_mode_rejects_unknown_names():
+    c = Counters("a", strict=True)
+    c.inc("a")
+    c.inc("lookups")  # registry name: fine even if not pre-declared
+    with pytest.raises(ValueError, match="unknown counter"):
+        c.inc("definitely_not_a_counter")
 
 
 def test_trainer_publishes_versions_during_pipelined_run(tmp_path):
