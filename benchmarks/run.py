@@ -4,12 +4,14 @@ Prints ``name,us_per_call,derived`` CSV rows (plus '#' context lines).
 Set BENCH_QUICK=1 for a fast pass.
 
 ``--smoke`` runs the MEM-PS hot-path bench, the pipeline-overlap bench, the
-multi-table session bench, the serving bench and the device train-step
-bench in quick mode (a few minutes) and refreshes ``BENCH_mem_ps.json`` +
-``BENCH_pipeline.json`` + ``BENCH_serving.json`` + ``BENCH_train_step.json``
-— the regression gates for PRs that touch the host hierarchy's batch path,
-the pipeline/overlap path, the client session layer, the serving subsystem,
-or the device kernel layer.
+multi-table session bench, the serving bench, the device train-step bench,
+the fault ride-through bench and the ingestion bench in quick mode (a few
+minutes) and refreshes ``BENCH_mem_ps.json`` + ``BENCH_pipeline.json`` +
+``BENCH_serving.json`` + ``BENCH_train_step.json`` + ``BENCH_faults.json``
++ ``BENCH_ingest.json`` — the regression gates for PRs that touch the host
+hierarchy's batch path, the pipeline/overlap path, the client session
+layer, the serving subsystem, the device kernel layer, the fault machinery,
+or the ingestion subsystem.
 """
 
 from __future__ import annotations
@@ -33,6 +35,7 @@ MODULES = [
     "benchmarks.bench_kernels",  # kernel layer
     "benchmarks.bench_train_step",  # fused embedding-bag device step
     "benchmarks.bench_faults",  # fault ride-through + recovery (§9)
+    "benchmarks.bench_ingest",  # streaming ingestion examples/s (§11)
 ]
 
 SMOKE_MODULES = [
@@ -42,6 +45,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_serving",
     "benchmarks.bench_train_step",
     "benchmarks.bench_faults",
+    "benchmarks.bench_ingest",
 ]
 
 

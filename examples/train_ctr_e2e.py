@@ -3,12 +3,15 @@ hierarchical PS for a few hundred batches.
 
 ~100M trained parameters = 6M sparse keys x emb 8 (params + adagrad state
 stream through MEM-PS/SSD-PS as one row on the named "ctr" table) + dense
-tower. Runs the complete production path: 4-stage pipeline over PSClient
-batch sessions, multi-node pulls, cache eviction, SSD compaction, async
-checkpoints (manifest records the table specs), and AUC eval on held-out
-traffic through read-only sessions (no pins, no registry).
+tower. Runs the complete production path: raw-record streaming ingestion
+(double-buffered staging + device feature extraction, DESIGN.md §11) ahead
+of the 4-stage pipeline over PSClient batch sessions, multi-node pulls,
+cache eviction, SSD compaction, async checkpoints (manifest records the
+table specs), and AUC eval on held-out traffic through read-only sessions
+(no pins, no registry).
 
 Run:  PYTHONPATH=src python examples/train_ctr_e2e.py [--batches 200]
+      (--host-feeder falls back to the classic numpy host extraction)
 """
 
 import argparse
@@ -21,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs.ctr_models import CTRConfig
 from repro.core.node import Cluster
-from repro.data.synthetic_ctr import SyntheticCTRStream
+from repro.data.synthetic_ctr import SyntheticCTRStream, to_ctr_batch
 from repro.models import ctr as ctr_model
 from repro.train.trainer import CTRTrainer, TrainerConfig
 
@@ -52,6 +55,9 @@ def main():
     ap.add_argument("--batches", type=int, default=200)
     ap.add_argument("--keys", type=int, default=6_000_000)
     ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--host-feeder", action="store_true",
+                    help="classic host numpy feeder instead of the "
+                    "streaming ingest pipeline (same batches bitwise)")
     args = ap.parse_args()
 
     cfg = CTRConfig(
@@ -75,17 +81,30 @@ def main():
     )
     tr = CTRTrainer(
         cfg, cluster,
-        TrainerConfig(checkpoint_every=50, checkpoint_dir=tmp + "/ckpt"),
+        TrainerConfig(checkpoint_every=50, checkpoint_dir=tmp + "/ckpt",
+                      ingest=not args.host_feeder),
     )
     stream = SyntheticCTRStream(
         cfg.n_sparse_keys, cfg.nnz_per_example, cfg.n_slots, cfg.batch_size,
         seed=0, zipf_a=1.05, noise=0.5,
     )
+    # both feeds derive from the same raw records, so --host-feeder trains
+    # on bitwise-identical batches through the classic numpy extraction
+    if args.host_feeder:
+        src = (
+            to_ctr_batch(r, cfg.n_sparse_keys, cfg.n_slots, cfg.nnz_per_example)
+            for r in stream.raw_records()
+        )
+        mode = "host feeder (numpy extraction)"
+    else:
+        src = stream.raw_records()
+        mode = "streaming ingest (device extraction + staging ring)"
+    print(f"feed: {mode}")
 
     auc0 = evaluate_auc(tr, cfg)
     print(f"AUC before training: {auc0:.4f}")
     t0 = time.perf_counter()
-    results = tr.run(stream, args.batches)
+    results = tr.run(src, args.batches)
     dt = time.perf_counter() - t0
     losses = [r["loss"] for r in results]
     ex_per_s = args.batches * cfg.batch_size / dt
@@ -97,6 +116,12 @@ def main():
     rep = tr.last_pipeline.report()
     busy = {k: f"{v['busy_s']:.1f}s" for k, v in rep.items()}
     print(f"pipeline stage busy times: {busy}; bottleneck={tr.last_pipeline.bottleneck()}")
+    if tr.ingestor is not None:
+        c = tr.ingestor.counters.snapshot()
+        print(f"ingest: {c.get('ingest_batches', 0)} batches staged "
+              f"({c.get('staging_bytes', 0)/2**20:.0f} MiB through the ring), "
+              f"slot wait {c.get('ingest_wait_us', 0)/1e6:.2f}s, "
+              f"overlap {c.get('ingest_overlap_us', 0)/1e6:.2f}s")
     hits = sum(n.mem.stats.hits for n in cluster.nodes)
     misses = sum(n.mem.stats.misses for n in cluster.nodes)
     live = sum(n.ssd.n_live_rows for n in cluster.nodes)

@@ -42,6 +42,11 @@ LOCK_ORDER: tuple[LockSpec, ...] = (
         why="serializes deferred cluster pushes by design (push stage)",
     ),
     LockSpec(
+        "StagingRing", "_lock", 11, False,
+        why="slot sequence/occupancy bookkeeping only; deps.wait, NIC "
+        "transfer and device_put all run outside it (ingest/staging.py)",
+    ),
+    LockSpec(
         "SnapshotPublisher", "_lock", 12, True,
         why="publish = flush_all + manifest write; serialized by design",
     ),

@@ -150,6 +150,11 @@ class Stage:
     timeout: float | None = None  # straggler threshold (seconds)
     max_retries: int = 2
     idempotent: bool = True  # False => never speculatively re-executed
+    # called at shutdown for each item this stage produced but the next
+    # stage never consumed — stages whose outputs own resources (e.g. a
+    # staging-ring slot, pinned rows) release them here so an abort/drain
+    # cannot strand ownership inside a dead queue
+    on_drain: Callable[[Any], None] | None = None
 
 
 class PipelineError(RuntimeError):
@@ -166,6 +171,7 @@ class Pipeline:
         self._error: Exception | None = None
         self.error_stage: str | None = None  # stage whose job raised first
         self.drained_items = 0  # in-flight batches discarded at shutdown
+        self.drain_errors: list[Exception] = []  # on_drain hook failures
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
 
@@ -189,15 +195,23 @@ class Pipeline:
                 continue
         return _STOPPED
 
-    def _drain(self, q: queue.Queue) -> int:
+    def _drain(self, q: queue.Queue, on_drain: Callable | None = None) -> int:
         n = 0
         while True:
             try:
                 item = q.get_nowait()
-                if item is not _SENTINEL and item is not _STOPPED:
-                    n += 1
             except queue.Empty:
                 return n
+            if item is _SENTINEL or item is _STOPPED:
+                continue
+            n += 1
+            if on_drain is not None:
+                try:
+                    on_drain(item)
+                except Exception as e:
+                    # a failing release hook must not mask the primary
+                    # pipeline error; collected for callers/tests to check
+                    self.drain_errors.append(e)
 
     # ------------------------------------------------------------- running
     def run(self, source: Iterable[Any]) -> Iterator[Any]:
@@ -247,6 +261,14 @@ class Pipeline:
                     return
                 t0 = time.perf_counter()
                 if not self._put(nxt, result):
+                    # the pipeline halted while this output waited for queue
+                    # space: it will never be consumed OR drained from a
+                    # queue, so release its resources here
+                    if stage.on_drain is not None:
+                        try:
+                            stage.on_drain(result)
+                        except Exception as e:
+                            self.drain_errors.append(e)
                     return
                 stats.stall_time += time.perf_counter() - t0
 
@@ -284,8 +306,14 @@ class Pipeline:
             t.join(timeout=max(0.0, deadline - time.monotonic()))
         # drained items are batches that entered the pipeline but never
         # reached the sink — fault-recovery code (CTRTrainer._ride_through)
-        # replays them from its own buffer; the count is diagnostic
-        self.drained_items += sum(self._drain(q) for q in all_queues)
+        # replays them from its own buffer; the count is diagnostic.
+        # queues[0] holds raw source items (no producer stage); queue i+1
+        # and out_q hold stage i's outputs, released via its on_drain hook
+        producers = [None] + list(self.stages)
+        self.drained_items += sum(
+            self._drain(q, s.on_drain if s is not None else None)
+            for q, s in zip(all_queues, producers)
+        )
 
     # ------------------------------------------------- one job, one stage
     def _run_job(self, stage: Stage, stats: StageStats, item: Any) -> Any:

@@ -1,0 +1,24 @@
+"""Streaming on-device ingestion subsystem (DESIGN.md §11).
+
+Raw log records (unhashed feature-id surrogates + ragged nnz) in, train-ready
+batches on device out. Two pieces:
+
+* :class:`~repro.ingest.staging.StagingRing` — a depth-2 host→device staging
+  ring; staging batch k+1 overlaps the pull/transfer/train of batch k, and
+  slot reuse is sequenced through the pipeline's DependencyRegistry so an
+  abort can never strand a waiter.
+* :class:`~repro.ingest.extract.DeviceIngestor` — stages a raw batch and runs
+  the fused hash/slot-bucket extraction kernel
+  (:func:`repro.kernels.ops.feature_extract`) over the staged planes,
+  yielding an :class:`~repro.ingest.extract.IngestedBatch` that duck-types
+  ``CTRBatch`` for the existing pull/transfer/train stages.
+
+The extraction is bitwise-equal to the host feeder
+(:func:`repro.data.synthetic_ctr.extract_host`) — pinned in
+tests/test_ingest.py.
+"""
+
+from repro.ingest.extract import DeviceIngestor, IngestedBatch
+from repro.ingest.staging import StagedBatch, StagingRing
+
+__all__ = ["DeviceIngestor", "IngestedBatch", "StagedBatch", "StagingRing"]

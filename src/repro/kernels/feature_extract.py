@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: streaming feature extraction (hash + slot bucketing).
+
+The ingest subsystem's device hot op (DESIGN.md §11): raw log records carry
+*unhashed* feature-id surrogates (the integer stand-in for strings like
+``query=shoes``); turning them into train-ready ``(keys, slot_of, valid)``
+takes two rounds of splitmix64 plus a modulo each — exactly the host-side
+numpy work (`repro.core.keys.hash_keys`) that serializes the feeder at
+production batch sizes. This kernel moves that math onto the accelerator.
+
+TPUs have no native 64-bit integer lanes (and Pallas TPU kernels cannot use
+u64 at all), so every 64-bit quantity is carried as a **pair of uint32
+planes** (lo, hi) and splitmix64 is emulated with u32 adds/xors/shifts and a
+16-bit-limb 32x32->64 multiply. The pair math is bit-exact against numpy's
+u64 `splitmix64` (pinned in tests/test_ingest.py), which is what makes the
+whole extraction path bitwise-equal to the host feeder.
+
+The modulo (``hash % n_keys`` / ``% n_slots``) is a power-of-two mask when
+the modulus allows and otherwise a vectorized 64-step binary long division
+(`lax.fori_loop`, no 64-bit intermediates). Moduli must fit 31 bits — the
+container-scale key spaces do; paper-scale 1e11-key tables would grow the
+limb count, not the algorithm.
+
+The kernel itself is purely elementwise over ``[rows, 128]`` u32 planes
+(raw_lo, raw_hi, valid -> key, slot), so the grid is a flat 1-D sweep of
+(8, 128) tiles; ragged-nnz packing (valid masks from per-example lengths,
+pack-width truncation) is cheap jnp glue around it.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# splitmix64 constants (repro.core.keys), split into (hi, lo) u32 halves
+_GOLDEN = 0x9E3779B97F4A7C15
+_MIX1 = 0xBF58476D1CE4E5B9
+_MIX2 = 0x94D049BB133111EB
+_MASK32 = 0xFFFFFFFF
+
+_BLOCK_ROWS = 8  # one f32/u32 tile of (8, 128) lanes per grid step
+
+
+def _const_pair(c: int) -> tuple[int, int]:
+    return (c >> 32) & _MASK32, c & _MASK32
+
+
+def _u32(x) -> jax.Array:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+# ------------------------------------------------------------ u64 pair math
+def add64(a_hi, a_lo, b_hi, b_lo):
+    lo = a_lo + b_lo  # wraps mod 2^32
+    carry = (lo < a_lo).astype(jnp.uint32)
+    return a_hi + b_hi + carry, lo
+
+
+def shr64(hi, lo, k: int):
+    """Logical right shift by a static 0 < k < 32."""
+    return hi >> _u32(k), (lo >> _u32(k)) | (hi << _u32(32 - k))
+
+
+def umul32_wide(a, b):
+    """Full 32x32 -> 64 product as a (hi, lo) u32 pair, via 16-bit limbs."""
+    a0, a1 = a & _u32(0xFFFF), a >> _u32(16)
+    b0, b1 = b & _u32(0xFFFF), b >> _u32(16)
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = (p00 >> _u32(16)) + (p01 & _u32(0xFFFF)) + (p10 & _u32(0xFFFF))
+    lo = (p00 & _u32(0xFFFF)) | (mid << _u32(16))
+    hi = p11 + (p01 >> _u32(16)) + (p10 >> _u32(16)) + (mid >> _u32(16))
+    return hi, lo
+
+
+def mul64(a_hi, a_lo, b_hi, b_lo):
+    """Low 64 bits of the 64x64 product (u64 wrap-around multiply)."""
+    hi, lo = umul32_wide(a_lo, b_lo)
+    return hi + a_lo * b_hi + a_hi * b_lo, lo
+
+
+def splitmix64_pair(hi, lo, seed: int = 0):
+    """Bit-exact splitmix64 (`repro.core.keys.splitmix64(x ^ seed)`) on
+    (hi, lo) uint32 pairs."""
+    s_hi, s_lo = _const_pair(seed)
+    g_hi, g_lo = _const_pair(_GOLDEN)
+    m1_hi, m1_lo = _const_pair(_MIX1)
+    m2_hi, m2_lo = _const_pair(_MIX2)
+    hi, lo = hi ^ _u32(s_hi), lo ^ _u32(s_lo)
+    z_hi, z_lo = add64(hi, lo, _u32(g_hi), _u32(g_lo))
+    t_hi, t_lo = shr64(z_hi, z_lo, 30)
+    z_hi, z_lo = mul64(z_hi ^ t_hi, z_lo ^ t_lo, _u32(m1_hi), _u32(m1_lo))
+    t_hi, t_lo = shr64(z_hi, z_lo, 27)
+    z_hi, z_lo = mul64(z_hi ^ t_hi, z_lo ^ t_lo, _u32(m2_hi), _u32(m2_lo))
+    t_hi, t_lo = shr64(z_hi, z_lo, 31)
+    return z_hi ^ t_hi, z_lo ^ t_lo
+
+
+def mod_pair(hi, lo, m: int) -> jax.Array:
+    """``(hi * 2^32 + lo) % m`` as uint32, for a static modulus m <= 2^31.
+
+    Power-of-two moduli reduce to a mask of the low word; the general case
+    is a 64-step vectorized binary long division — the remainder register
+    stays < m <= 2^31, so ``(r << 1) | bit`` never overflows u32.
+    """
+    if not 0 < m <= (1 << 31):
+        raise ValueError(f"modulus {m} must be in (0, 2^31] for u32-pair math")
+    if m & (m - 1) == 0:
+        return lo & _u32(m - 1)  # x mod 2^k depends only on the low k bits
+
+    def body(i, r):
+        word = jnp.where(i < 32, hi, lo)
+        sh = (_u32(31) - (_u32(i) & _u32(31))).astype(jnp.uint32)
+        bit = (word >> sh) & _u32(1)
+        r = (r << _u32(1)) | bit
+        return jnp.where(r >= _u32(m), r - _u32(m), r)
+
+    return jax.lax.fori_loop(0, 64, body, jnp.zeros_like(lo))
+
+
+def hash_mod_pair(hi, lo, seed: int, m: int) -> jax.Array:
+    """``hash_keys(x, seed) % m`` on u32 pairs -> u32 (m <= 2^31)."""
+    h_hi, h_lo = splitmix64_pair(hi, lo, seed)
+    return mod_pair(h_hi, h_lo, m)
+
+
+# ------------------------------------------------------- the extraction op
+def _extract_math(raw_hi, raw_lo, valid_u32, *, n_keys, n_slots, key_seed, slot_seed):
+    """Shared elementwise core: raw id pair + valid mask -> (key, slot).
+
+    Bitwise contract (`repro.data.synthetic_ctr.extract_host`): the slot
+    hash is taken over the *modded* key (matching the host feeder, which
+    hashes the finished key), and padded positions carry key 0 / slot 0.
+    """
+    key = hash_mod_pair(raw_hi, raw_lo, key_seed, n_keys)  # < n_keys <= 2^31
+    slot = hash_mod_pair(jnp.zeros_like(key), key, slot_seed, n_slots)
+    live = valid_u32 != 0
+    return jnp.where(live, key, 0), jnp.where(live, slot, 0).astype(jnp.int32)
+
+
+def _extract_kernel(raw_lo_ref, raw_hi_ref, valid_ref, key_ref, slot_ref,
+                    *, n_keys, n_slots, key_seed, slot_seed):
+    key, slot = _extract_math(
+        raw_hi_ref[...], raw_lo_ref[...], valid_ref[...],
+        n_keys=n_keys, n_slots=n_slots, key_seed=key_seed, slot_seed=slot_seed,
+    )
+    key_ref[...] = key
+    slot_ref[...] = slot
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_keys", "n_slots", "key_seed", "slot_seed", "interpret"),
+)
+def feature_extract_pallas(
+    raw_lo: jax.Array,  # [B, P] uint32 — low half of the raw feature ids
+    raw_hi: jax.Array,  # [B, P] uint32 — high half
+    valid: jax.Array,  # [B, P] padding mask (non-bool treated as != 0)
+    *,
+    n_keys: int,
+    n_slots: int,
+    key_seed: int = 17,
+    slot_seed: int = 31,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused hash + slot-bucket kernel -> (keys u32 [B, P], slot_of i32 [B, P])."""
+    B, P = raw_lo.shape
+    n = B * P
+    lane = _BLOCK_ROWS * 128
+    rows = max(_BLOCK_ROWS, math.ceil(n / lane) * _BLOCK_ROWS)
+    pad = rows * 128 - n
+    plane = lambda x, dt: jnp.pad(
+        jnp.asarray(x, dt).reshape(-1), (0, pad)
+    ).reshape(rows, 128)
+    kernel = functools.partial(
+        _extract_kernel,
+        n_keys=n_keys, n_slots=n_slots, key_seed=key_seed, slot_seed=slot_seed,
+    )
+    spec = pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0))
+    keys, slots = pl.pallas_call(
+        kernel,
+        grid=(rows // _BLOCK_ROWS,),
+        in_specs=[spec, spec, spec],
+        out_specs=[
+            pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0)),
+            pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 128), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        plane(raw_lo, jnp.uint32),
+        plane(raw_hi, jnp.uint32),
+        plane((jnp.asarray(valid).reshape(-1) != 0), jnp.uint32),
+    )
+    unpack = lambda x: x.reshape(-1)[:n].reshape(B, P)
+    return unpack(keys), unpack(slots)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_keys", "n_slots", "key_seed", "slot_seed"),
+)
+def feature_extract_portable(
+    raw_lo: jax.Array,
+    raw_hi: jax.Array,
+    valid: jax.Array,
+    *,
+    n_keys: int,
+    n_slots: int,
+    key_seed: int = 17,
+    slot_seed: int = 31,
+) -> tuple[jax.Array, jax.Array]:
+    """Same math as the kernel, lowered as plain jnp (any backend)."""
+    return _extract_math(
+        jnp.asarray(raw_hi, jnp.uint32),
+        jnp.asarray(raw_lo, jnp.uint32),
+        (jnp.asarray(valid) != 0).astype(jnp.uint32),
+        n_keys=n_keys, n_slots=n_slots, key_seed=key_seed, slot_seed=slot_seed,
+    )

@@ -29,6 +29,10 @@ import numpy as np
 from repro.kernels import ref as _ref
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.embedding_lookup import embedding_lookup_pallas
+from repro.kernels.feature_extract import (
+    feature_extract_pallas,
+    feature_extract_portable,
+)
 from repro.kernels.fused_adagrad import adagrad_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.scatter_add import scatter_add_pallas
@@ -210,6 +214,46 @@ def embedding_bag(
     valid = valid.astype(jnp.bool_)  # all three impls see identical mask math
     return _embedding_bag(
         table, slot_ids, slot_of, valid, int(n_slots), bool(use_pallas), bool(interpret)
+    )
+
+
+# --------------------------------------------------------------------------
+# streaming feature extraction (ingest subsystem, DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+
+def feature_extract(
+    raw_lo,  # [B, P] uint32 — low half of the unhashed raw feature ids
+    raw_hi,  # [B, P] uint32 — high half
+    valid,  # [B, P] padding mask (cast to bool)
+    *,
+    n_keys: int,
+    n_slots: int,
+    key_seed: int = 17,
+    slot_seed: int = 31,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Device feature extraction: raw ids -> (keys u32, slot_of i32).
+
+    The ingest pipeline's hot op: two rounds of splitmix64 (as u32-pair
+    math — TPUs have no 64-bit lanes) plus a modulo each, bitwise-equal to
+    the host feeder's ``hash_keys(raw) % n_keys`` / ``% n_slots`` numpy
+    path. Padded positions come back as key 0 / slot 0.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return feature_extract_pallas(
+            raw_lo, raw_hi, valid,
+            n_keys=n_keys, n_slots=n_slots,
+            key_seed=key_seed, slot_seed=slot_seed,
+            interpret=not _on_tpu() if interpret is None else interpret,
+        )
+    return feature_extract_portable(
+        raw_lo, raw_hi, valid,
+        n_keys=n_keys, n_slots=n_slots,
+        key_seed=key_seed, slot_seed=slot_seed,
     )
 
 

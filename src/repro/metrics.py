@@ -26,6 +26,10 @@ KNOWN_COUNTERS = frozenset({
     "node_recoveries", "rows_replayed",
     # NIC wire quantization (core/node.py NetworkModel via add_from)
     "quantized_messages", "quantize_bytes_saved",
+    # streaming ingestion (ingest/staging.py + ingest/extract.py); times
+    # are integer microseconds (counters are int-only)
+    "ingest_batches", "ingest_examples", "staging_bytes",
+    "ingest_wait_us", "ingest_overlap_us", "ingest_drained",
 })
 
 

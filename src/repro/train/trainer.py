@@ -75,6 +75,12 @@ class TrainerConfig:
     ride_through: bool = False
     max_recoveries: int = 4  # distinct faults survived per run() call
     redo_rows: int = 262_144  # redo-log auto-flush bound (ride_through)
+    # streaming ingestion (DESIGN.md §11): the stream yields RawRecordBatch
+    # (unhashed ids, ragged nnz) and an ingest stage ahead of pull/push
+    # stages them through the double-buffered ring + extracts features on
+    # device; False = classic host feeder (stream yields CTRBatch)
+    ingest: bool = False
+    staging_depth: int = 2  # ring slots (2 = the paper-style pinned pair)
 
 
 class CTRTrainer:
@@ -113,6 +119,21 @@ class CTRTrainer:
         self._replay: dict[int, CTRBatch] = {}
         self._results: dict[int, dict] = {}
         self.recovery_time_s = 0.0
+        # streaming ingestion: raw records are staged + device-extracted by
+        # a dedicated pipeline stage; the ring shares the client's
+        # DependencyRegistry so pipeline aborts wake staging waiters
+        self.ingestor = None
+        if tcfg.ingest:
+            from repro.ingest import DeviceIngestor
+
+            self.ingestor = DeviceIngestor(
+                n_keys=cfg.n_sparse_keys,
+                n_slots=cfg.n_slots,
+                pack_width=cfg.nnz_per_example,
+                network=cluster.network,
+                deps=self.client.deps,
+                depth=tcfg.staging_depth,
+            )
         if self.tcfg.ride_through:
             cluster.enable_redo(self.tcfg.redo_rows)
         self.ckpt = (
@@ -131,6 +152,20 @@ class CTRTrainer:
             )
 
     # ------------------------------------------------------------ stages
+    def _stage_ingest(self, raw):
+        # stage the raw planes into the next ring slot (overlapping the
+        # previous batch's pull/transfer/train) and extract (keys, slot_of,
+        # valid) on device; the result duck-types CTRBatch downstream
+        return self.ingestor.ingest(raw)
+
+    def _drain_release(self, item):
+        """on_drain hook: free the staging slot of a batch the pipeline
+        dropped at shutdown (stage outputs carry the batch first)."""
+        batch = item[0] if isinstance(item, tuple) else item
+        staged = getattr(batch, "staged", None)
+        if staged is not None:
+            self.ingestor.ring.drain_release(staged)
+
     def _stage_pull(self, batch: CTRBatch):
         # opening the session also applies completed predecessors' deferred
         # pushes on this thread, then pulls fresh keys / forwards
@@ -213,6 +248,11 @@ class CTRTrainer:
             and self.batches_done % self.tcfg.publish_every == 0
         ):
             self.publish()
+        # the staged planes have been consumed: free the ring slot so the
+        # batch depth slots ahead can start staging (double-buffer release)
+        staged = getattr(batch, "staged", None)
+        if staged is not None:
+            self.ingestor.ring.release(staged)
         result = {"batch_id": batch.batch_id, "loss": loss, "n_working": sess.n_working}
         # recorded here (not at the pipeline sink): a batch whose result
         # dict is still in a queue when the pipeline dies has already
@@ -232,26 +272,45 @@ class CTRTrainer:
     # ------------------------------------------------------------ running
     def build_pipeline(self) -> Pipeline:
         t = self.tcfg
-        return Pipeline(
-            [
-                # only the read stage is side-effect free, so it alone gets
-                # straggler speculation (the paper's HDFS-read stragglers)
-                Stage("read", lambda b: b, capacity=t.queue_capacity,
-                      timeout=t.stage_timeout),
-                # pull/push pins MEM-PS rows and registers in-flight batches,
-                # transfer advances the device-reuse plan, train owns the
-                # model state: NOT idempotent, never speculated
-                Stage("pull_push", self._stage_pull, capacity=t.queue_capacity,
-                      idempotent=False),
-                Stage("transfer", self._stage_transfer, capacity=t.queue_capacity,
-                      idempotent=False),
-                # train mutates tower/opt state before it can fail, so a
-                # retry would apply the batch's gradient step twice
-                Stage("train", self._stage_train, capacity=t.queue_capacity,
-                      idempotent=False, max_retries=0),
-            ],
-            deps=self.client.deps,
-        )
+        stages = [
+            # only the read stage is side-effect free, so it alone gets
+            # straggler speculation (the paper's HDFS-read stragglers)
+            Stage("read", lambda b: b, capacity=t.queue_capacity,
+                  timeout=t.stage_timeout),
+        ]
+        rel = self._drain_release if self.ingestor is not None else None
+        if self.ingestor is not None:
+            # a fresh pipeline run resets the registry (Pipeline.run ->
+            # deps.reset), dropping the previous run's slot-free tokens —
+            # the ring's sequence space must restart with it
+            self.ingestor.ring.reset()
+            # stage() claims a monotone ring sequence number: re-execution
+            # would burn slots, so never speculated
+            stages.append(
+                Stage("ingest", self._stage_ingest, capacity=t.queue_capacity,
+                      idempotent=False, on_drain=rel)
+            )
+        stages += [
+            # pull/push pins MEM-PS rows and registers in-flight batches,
+            # transfer advances the device-reuse plan, train owns the
+            # model state: NOT idempotent, never speculated
+            Stage("pull_push", self._stage_pull, capacity=t.queue_capacity,
+                  idempotent=False, on_drain=rel),
+            Stage("transfer", self._stage_transfer, capacity=t.queue_capacity,
+                  idempotent=False, on_drain=rel),
+            # train mutates tower/opt state before it can fail, so a
+            # retry would apply the batch's gradient step twice
+            Stage("train", self._stage_train, capacity=t.queue_capacity,
+                  idempotent=False, max_retries=0),
+        ]
+        return Pipeline(stages, deps=self.client.deps)
+
+    def _serial_step(self, batch):
+        """One batch through the full stage chain on the calling thread —
+        the serial baseline and the ride-through replay path."""
+        if self.ingestor is not None:
+            batch = self._stage_ingest(batch)
+        return self._stage_train(self._stage_transfer(self._stage_pull(batch)))
 
     def _record(self, src):
         """Tee the source into the replay buffer: every batch handed to the
@@ -290,10 +349,14 @@ class CTRTrainer:
         # strict drain: after recovery, a push failure is a real error
         self.client.drain()
         self.dev_ws.reset()
+        if self.ingestor is not None:
+            # the aborted pipeline left ring slots occupied; replay re-stages
+            # every unfinished batch from its raw record, so restart the ring
+            self.ingestor.ring.reset()
         self._prev_table = self._prev_accum = None
         for bid in sorted(self._replay):
             batch = self._replay[bid]  # popped by _stage_train on success
-            self._stage_train(self._stage_transfer(self._stage_pull(batch)))
+            self._serial_step(batch)
         self.recovery_time_s += time.perf_counter() - t0
 
     def run(self, stream, n_batches: int, pipelined: bool = True):
@@ -310,8 +373,10 @@ class CTRTrainer:
                         pass  # results are recorded at the train stage
                     self.last_pipeline = pipe
                 else:  # serial baseline (the "no pipeline" ablation)
+                    if self.ingestor is not None:
+                        self.ingestor.ring.reset()
                     for b in recorded:
-                        self._stage_train(self._stage_transfer(self._stage_pull(b)))
+                        self._serial_step(b)
                 break
             except BaseException as e:
                 # a further kill *during* the replay lands back here too:
@@ -334,6 +399,8 @@ class CTRTrainer:
                 # failure path: release pins without masking the primary error
                 self.client.drain(strict=False)
                 self.dev_ws.reset()
+                if self.ingestor is not None:
+                    self.ingestor.ring.reset()
                 raise e
         # success path: the tail batches' deferred pushes MUST land (a
         # failure here is a real error) — then drop cross-run device
@@ -341,6 +408,8 @@ class CTRTrainer:
         # rows no longer match the cluster state
         self.client.drain()
         self.dev_ws.reset()
+        if self.ingestor is not None:
+            self.ingestor.ring.reset()
         if self.ckpt:
             self.ckpt.wait()
         return [self._results[b] for b in sorted(self._results)]

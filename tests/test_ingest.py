@@ -1,0 +1,412 @@
+"""Streaming ingestion subsystem (DESIGN.md §11): device extraction parity,
+staging-ring ownership under abort/drain, trainer integration, faults."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.ctr_models import TINY
+from repro.core.faults import NIC_STALL, NODE_KILL, FaultInjector, FaultSpec
+from repro.core.keys import hash_keys, splitmix64
+from repro.core.node import Cluster
+from repro.core.pipeline import (
+    DependencyAborted,
+    DependencyRegistry,
+    Pipeline,
+    Stage,
+)
+from repro.data.synthetic_ctr import (
+    RawRecordBatch,
+    SyntheticCTRStream,
+    extract_host,
+    to_ctr_batch,
+)
+from repro.ingest import DeviceIngestor, StagingRing
+from repro.kernels import ops as kops
+from repro.kernels.feature_extract import (
+    feature_extract_pallas,
+    feature_extract_portable,
+    mod_pair,
+    splitmix64_pair,
+)
+from repro.metrics import KNOWN_COUNTERS, Counters
+from repro.train.trainer import CTRTrainer, TrainerConfig
+
+_EDGE_U64 = np.array(
+    [0, 1, 2, 0xFFFFFFFF, 0x100000000, 2**63, 2**64 - 1, 0x9E3779B97F4A7C15],
+    dtype=np.uint64,
+)
+
+
+def _rand_u64(rng, n):
+    return rng.integers(0, 2**64, size=n, dtype=np.uint64)
+
+
+def _pairs(x):
+    x = np.asarray(x, dtype=np.uint64)
+    return (x >> np.uint64(32)).astype(np.uint32), (x & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32
+    )
+
+
+# ------------------------------------------------------- u32-pair hash math
+
+
+def test_splitmix64_pair_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([_EDGE_U64, _rand_u64(rng, 512)])
+    hi, lo = _pairs(x)
+    for seed in (0, 17, 31, 23, 2**64 - 1):
+        want = splitmix64(x ^ np.uint64(seed))
+        got_hi, got_lo = splitmix64_pair(hi, lo, seed)
+        got = (np.asarray(got_hi).astype(np.uint64) << np.uint64(32)) | np.asarray(
+            got_lo
+        ).astype(np.uint64)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_mod_pair_matches_numpy():
+    rng = np.random.default_rng(1)
+    x = np.concatenate([_EDGE_U64, _rand_u64(rng, 256)])
+    hi, lo = _pairs(x)
+    for m in (1, 2, 3, 7, 25, 127, 128, 4096, 600_000, 2**31 - 1, 2**31):
+        np.testing.assert_array_equal(
+            np.asarray(mod_pair(hi, lo, m)).astype(np.uint64),
+            x % np.uint64(m),
+            err_msg=f"modulus {m}",
+        )
+
+
+def test_mod_pair_rejects_wide_modulus():
+    hi, lo = _pairs(_EDGE_U64)
+    with pytest.raises(ValueError):
+        mod_pair(hi, lo, 2**31 + 1)
+
+
+# ------------------------------------------------- device extraction parity
+
+
+def _assert_extract_parity(raw, lengths, n_keys, n_slots):
+    want_k, want_s, want_v = extract_host(raw, lengths, n_keys, n_slots)
+    hi, lo = _pairs(raw)
+    valid = want_v
+    for fn in (
+        lambda: feature_extract_portable(lo, hi, valid, n_keys=n_keys, n_slots=n_slots),
+        lambda: feature_extract_pallas(
+            lo, hi, valid, n_keys=n_keys, n_slots=n_slots, interpret=True
+        ),
+        lambda: kops.feature_extract(lo, hi, valid, n_keys=n_keys, n_slots=n_slots),
+    ):
+        got_k, got_s = fn()
+        np.testing.assert_array_equal(np.asarray(got_k).astype(np.uint64), want_k)
+        np.testing.assert_array_equal(np.asarray(got_s), want_s)
+
+
+def test_feature_extract_bitwise_parity():
+    rng = np.random.default_rng(2)
+    raw = _rand_u64(rng, 64 * 16).reshape(64, 16)
+    lengths = rng.integers(0, 17, 64).astype(np.int32)
+    _assert_extract_parity(raw, lengths, 600_000, 25)
+
+
+def test_feature_extract_full_rows_and_odd_shapes():
+    rng = np.random.default_rng(3)
+    # non-multiple-of-(8*128) element counts exercise the kernel's padding
+    for B, P in ((1, 1), (3, 5), (7, 129), (64, 16)):
+        raw = _rand_u64(rng, B * P).reshape(B, P)
+        _assert_extract_parity(raw, None, 1000, 8)
+
+
+def test_feature_extract_empty_examples():
+    rng = np.random.default_rng(4)
+    raw = _rand_u64(rng, 8 * 4).reshape(8, 4)
+    lengths = np.zeros(8, dtype=np.int32)  # every example empty
+    want_k, want_s, want_v = extract_host(raw, lengths, 1000, 8)
+    assert not want_v.any() and not want_k.any() and not want_s.any()
+    _assert_extract_parity(raw, lengths, 1000, 8)
+
+
+def test_extract_host_golden_values():
+    """Pin the extraction contract itself: these values may never change
+    without breaking every stored key space."""
+    raw = np.array([[0, 1, 2**63, 2**64 - 1, 123456789]], dtype=np.uint64)
+    k, s, v = extract_host(raw, None, 600_000, 25)
+    assert k.tolist() == [[41379, 321095, 501017, 21531, 431833]]
+    assert s.tolist() == [[21, 23, 10, 17, 22]]
+    assert v.all()
+
+
+def test_extract_host_truncates_past_pack_width():
+    # nnz > pack width: the reader row is wider than the trainer packs
+    rng = np.random.default_rng(5)
+    raw = _rand_u64(rng, 4 * 10).reshape(4, 10)
+    lengths = np.array([10, 7, 3, 0], dtype=np.int32)
+    k, s, v = extract_host(raw, lengths, 1000, 8, pack_width=6)
+    assert k.shape == (4, 6)
+    np.testing.assert_array_equal(v.sum(axis=1), [6, 6, 3, 0])
+    full_k, _, _ = extract_host(raw[:, :6], None, 1000, 8)
+    np.testing.assert_array_equal(k[0], full_k[0])  # truncation = slice
+
+
+# --------------------------------------------------------- raw record stream
+
+
+def test_next_batch_is_extract_host_composition():
+    """The host feeder is exactly: draw raw surrogates, extract_host them.
+    (next_batch is the bitwise parity oracle for the device path.)"""
+    a = SyntheticCTRStream(1000, 16, 8, 32, seed=9)
+    b = SyntheticCTRStream(1000, 16, 8, 32, seed=9)
+    raw = b._draw_raw((32, 16))
+    want_k, want_s, want_v = extract_host(raw, None, 1000, 8)
+    got = a.next_batch()
+    np.testing.assert_array_equal(got.keys, want_k)
+    np.testing.assert_array_equal(got.slot_of, want_s)
+    assert got.keys.dtype == np.uint64 and got.slot_of.dtype == np.int32
+
+
+def test_raw_records_variable_nnz():
+    s = SyntheticCTRStream(1000, 16, 8, 64, seed=1)
+    it = s.raw_records(min_nnz=1, max_nnz=24)
+    seen = set()
+    for bid in range(4):
+        r = next(it)
+        assert r.raw_ids.shape == (64, 24) and r.raw_ids.dtype == np.uint64
+        assert r.lengths.min() >= 1 and r.lengths.max() <= 24
+        assert r.labels.dtype == np.float32 and r.batch_id == bid
+        seen.update(r.lengths.tolist())
+    assert len(seen) > 4, "nnz should actually vary across examples"
+
+
+def test_ingestor_matches_host_feeder_bitwise():
+    cfg = TINY
+    s1 = SyntheticCTRStream(cfg.n_sparse_keys, cfg.nnz_per_example, cfg.n_slots, 32, seed=2)
+    s2 = SyntheticCTRStream(cfg.n_sparse_keys, cfg.nnz_per_example, cfg.n_slots, 32, seed=2)
+    ing = DeviceIngestor(
+        n_keys=cfg.n_sparse_keys, n_slots=cfg.n_slots, pack_width=cfg.nnz_per_example
+    )
+    for raw_wide, raw_same in zip(
+        s1.raw_records(max_nnz=cfg.nnz_per_example + 8),
+        s2.raw_records(max_nnz=cfg.nnz_per_example + 8),
+    ):
+        host = to_ctr_batch(raw_same, cfg.n_sparse_keys, cfg.n_slots, cfg.nnz_per_example)
+        dev = ing.ingest(raw_wide)
+        np.testing.assert_array_equal(dev.keys, host.keys)
+        np.testing.assert_array_equal(np.asarray(dev.slot_of), host.slot_of)
+        np.testing.assert_array_equal(np.asarray(dev.valid), host.valid)
+        np.testing.assert_array_equal(np.asarray(dev.labels), host.labels)
+        ing.release(dev)
+        if raw_wide.batch_id >= 3:
+            break
+
+
+def test_ingestor_pads_narrow_reader_rows():
+    ing = DeviceIngestor(n_keys=1000, n_slots=8, pack_width=6)
+    raw = RawRecordBatch(
+        raw_ids=np.arange(8, dtype=np.uint64).reshape(2, 4),  # L=4 < P=6
+        lengths=np.array([4, 2], dtype=np.int32),
+        labels=np.zeros(2, dtype=np.float32),
+        batch_id=0,
+    )
+    got = ing.ingest(raw)
+    want_k, want_s, want_v = extract_host(
+        np.pad(raw.raw_ids, ((0, 0), (0, 2))), raw.lengths, 1000, 8
+    )
+    np.testing.assert_array_equal(got.keys, want_k)
+    np.testing.assert_array_equal(np.asarray(got.valid), want_v)
+
+
+# ------------------------------------------------------------- staging ring
+
+
+def test_staging_ring_blocks_at_depth_and_releases_in_order():
+    deps = DependencyRegistry()
+    ring = StagingRing(depth=2, deps=deps)
+    host = {"x": np.zeros(4, dtype=np.float32)}
+    s0 = ring.stage(0, host)
+    s1 = ring.stage(1, host)
+    assert ring.live_slots == 2
+
+    staged3 = []
+
+    def third():
+        staged3.append(ring.stage(2, host))
+
+    t = threading.Thread(target=third, daemon=True)
+    t.start()
+    time.sleep(0.15)
+    assert not staged3, "third stage must block until slot 0 frees"
+    ring.release(s0)
+    t.join(timeout=5.0)
+    assert not t.is_alive() and staged3[0].seq == 2
+    ring.release(s1)
+    ring.release(staged3[0])
+    ring.release(staged3[0])  # idempotent
+    assert ring.live_slots == 0
+    assert ring.counters["ingest_batches"] == 3
+
+
+def test_staging_ring_abort_wakes_blocked_stager():
+    deps = DependencyRegistry()
+    ring = StagingRing(depth=1, deps=deps)
+    ring.stage(0, {"x": np.zeros(2, dtype=np.float32)})
+    err = []
+
+    def second():
+        try:
+            ring.stage(1, {"x": np.zeros(2, dtype=np.float32)})
+        except DependencyAborted as e:
+            err.append(e)
+
+    t = threading.Thread(target=second, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    deps.abort()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and err, "abort must wake the blocked stage()"
+
+
+def test_pipeline_on_drain_releases_unconsumed_outputs():
+    """A mid-pipeline failure drains queued stage outputs through the
+    producer's on_drain hook (and hook errors are collected, not raised)."""
+    deps = DependencyRegistry()
+    ring = StagingRing(depth=8, deps=deps)
+    released = []
+
+    def mk(i):
+        return ring.stage(i, {"x": np.zeros(2, dtype=np.float32)})
+
+    def boom(item):
+        raise RuntimeError("consumer died")
+
+    pipe = Pipeline(
+        [
+            Stage("stage", lambda i: mk(i), capacity=4,
+                  on_drain=lambda s: (released.append(s.seq), ring.drain_release(s))),
+            Stage("boom", boom, capacity=4, max_retries=0),
+        ],
+        deps=deps,
+    )
+    with pytest.raises(Exception):
+        for _ in pipe.run(range(6)):
+            pass
+    # every slot frees except the one the failing consumer had already
+    # dequeued — that in-flight item is the trainer's ring.reset() job
+    assert ring.live_slots == 1
+    assert len(released) == ring.staged_total - 1 and released
+    assert not pipe.drain_errors
+
+
+def test_pipeline_on_drain_collects_hook_errors():
+    def bad_hook(item):
+        raise ValueError("hook failure")
+
+    pipe = Pipeline(
+        [
+            Stage("a", lambda i: i, capacity=4, on_drain=bad_hook),
+            Stage("b", lambda i: 1 / 0, capacity=4, max_retries=0),
+        ]
+    )
+    with pytest.raises(Exception) as ei:
+        for _ in pipe.run(range(5)):
+            pass
+    assert "division" in str(ei.value)  # hook errors never mask the cause
+    assert all(isinstance(e, ValueError) for e in pipe.drain_errors)
+
+
+# ------------------------------------------------------ trainer integration
+
+
+def _cluster(tmp_path, tag):
+    return Cluster(2, str(tmp_path / tag), dim=TINY.emb_dim * 2,
+                   cache_capacity=2048, file_capacity=128,
+                   init_cols=TINY.emb_dim)
+
+
+def _raw_stream(seed=3):
+    cfg = TINY
+    return SyntheticCTRStream(cfg.n_sparse_keys, cfg.nnz_per_example,
+                              cfg.n_slots, cfg.batch_size, seed=seed)
+
+
+def _host_arm(seed=3):
+    cfg = TINY
+    return (
+        to_ctr_batch(r, cfg.n_sparse_keys, cfg.n_slots, cfg.nnz_per_example)
+        for r in _raw_stream(seed).raw_records()
+    )
+
+
+def test_trainer_ingest_bitwise_equals_host_feeder(tmp_path):
+    """Acceptance: the ingest pipeline's losses are bitwise-equal to the
+    host numpy feeder on the same raw records — pipelined AND serial."""
+    tr_h = CTRTrainer(TINY, _cluster(tmp_path, "host"), TrainerConfig())
+    want = [r["loss"] for r in tr_h.run(_host_arm(), 8)]
+
+    tr_i = CTRTrainer(TINY, _cluster(tmp_path, "ingest"), TrainerConfig(ingest=True))
+    got = [r["loss"] for r in tr_i.run(_raw_stream().raw_records(), 8)]
+    assert got == want
+
+    tr_s = CTRTrainer(TINY, _cluster(tmp_path, "serial"), TrainerConfig(ingest=True))
+    got_serial = [r["loss"] for r in tr_s.run(_raw_stream().raw_records(), 8,
+                                              pipelined=False)]
+    assert got_serial == want
+
+    c = tr_i.ingestor.counters
+    assert c["ingest_batches"] == 8 and c["ingest_examples"] == 8 * TINY.batch_size
+    assert c["staging_bytes"] > 0
+    assert tr_i.ingestor.ring.live_slots == 0, "run end must leave no slot live"
+
+
+def test_trainer_ingest_failure_path_frees_slots(tmp_path):
+    cl = _cluster(tmp_path, "die")
+    tr = CTRTrainer(TINY, cl, TrainerConfig(ingest=True))  # no ride-through
+    FaultInjector([FaultSpec(NODE_KILL, at_op=20, node_id=0)]).arm(cl)
+    with pytest.raises(Exception):
+        tr.run(_raw_stream().raw_records(), 10)
+    assert tr.ingestor.ring.live_slots == 0
+    assert cl.total_pins() == 0
+
+
+def test_trainer_ingest_rides_through_nic_stall_in_staging(tmp_path):
+    """NIC stall injected on the very first transfer — which, with ingest
+    on, is the staging H2D copy — must only slow the run, not change it."""
+    tr_c = CTRTrainer(TINY, _cluster(tmp_path, "calm"), TrainerConfig(ingest=True))
+    want = [r["loss"] for r in tr_c.run(_raw_stream().raw_records(), 6)]
+
+    cl = _cluster(tmp_path, "stall")
+    tr = CTRTrainer(TINY, cl, TrainerConfig(ingest=True, ride_through=True))
+    inj = FaultInjector([FaultSpec(NIC_STALL, at_op=1, stall_s=0.2)]).arm(cl)
+    got = [r["loss"] for r in tr.run(_raw_stream().raw_records(), 6)]
+    inj.disarm()
+    assert inj.all_fired() and cl.network.stalls >= 1
+    assert got == want
+
+
+def test_trainer_ingest_rides_through_node_kill_bitwise(tmp_path):
+    tr_c = CTRTrainer(TINY, _cluster(tmp_path, "clean"), TrainerConfig(ingest=True))
+    want = [r["loss"] for r in tr_c.run(_raw_stream().raw_records(), 10)]
+
+    cl = _cluster(tmp_path, "chaos")
+    tr = CTRTrainer(TINY, cl, TrainerConfig(ingest=True, ride_through=True))
+    inj = FaultInjector([FaultSpec(NODE_KILL, at_op=40, node_id=1)]).arm(cl)
+    got = [r["loss"] for r in tr.run(_raw_stream().raw_records(), 10)]
+    inj.disarm()
+    assert inj.all_fired()
+    assert cl.fault_counters["node_recoveries"] >= 1
+    np.testing.assert_array_equal(got, want)
+    assert tr.ingestor.ring.live_slots == 0
+    assert cl.total_pins() == 0 and tr.ps.n_inflight() == 0
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_ingest_counters_registered():
+    for name in ("ingest_batches", "ingest_examples", "staging_bytes",
+                 "ingest_wait_us", "ingest_overlap_us", "ingest_drained"):
+        assert name in KNOWN_COUNTERS
+    c = Counters(strict=True)
+    c.inc("ingest_batches")  # strict mode accepts registered names
+    assert c["ingest_batches"] == 1
