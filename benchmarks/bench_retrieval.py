@@ -1,0 +1,158 @@
+"""Retrieval bench: top-k MIPS QPS/latency + recall@k vs the exact oracle.
+
+One published snapshot's ad table becomes a :class:`RetrievalIndex`; the
+bench then streams query batches through ``RetrievalEngine.search`` and
+reports:
+
+  (a) **search** — QPS (queries/s), per-batch p50/p99 latency, via the
+      backend the dispatcher picks for this host (the portable jnp arm off
+      TPU; the Pallas kernel on it).
+  (b) **recall@k vs oracle** — every search result is checked against
+      ``kernels.ref.topk_mips_ref`` on the same corpus. Embeddings are
+      drawn on a dyadic grid (1/64 steps) so blocked and full matmuls are
+      bitwise-equal in f32: the acceptance bar is recall == 1.0 *and*
+      exact score/index equality, not approximate overlap.
+  (c) **pallas parity sample** — a small query slice through the Pallas
+      kernel (``interpret=True`` off TPU), equality-checked against the
+      same oracle, so the kernel arm is exercised even where it is too
+      slow to time honestly.
+  (d) **rerank** — the feature-interaction second stage's per-batch cost.
+
+Alternating best-of ``repeats`` timing (bench-noise protocol, see
+BENCH_pipeline). Counters come from ``engine.counters`` — the same source
+tests assert on. Results land in ``BENCH_retrieval.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit, note
+from repro.core.client import PSClient
+from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
+from repro.kernels import ref as kref
+from repro.retrieval import RetrievalEngine
+from repro.serve import SnapshotPublisher
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_retrieval.json")
+
+DIM = 32
+TABLE = "ads"
+K = 10
+
+
+def _dyadic(rng, shape):
+    return (rng.integers(-128, 128, size=shape) / 64.0).astype(np.float32)
+
+
+def main() -> None:
+    note("retrieval: blocked top-k MIPS over one published snapshot")
+    n_ads = 20_000 if QUICK else 50_000
+    batch = 64
+    n_requests = 24 if QUICK else 48
+    repeats = 3 if QUICK else 5
+    results: dict = {"quick": QUICK, "n_ads": n_ads, "dim": DIM, "k": K,
+                     "batch": batch, "n_requests": n_requests,
+                     "repeats": repeats}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cluster = Cluster(2, f"{tmp}/train", dim=DIM,
+                          cache_capacity=2 * n_ads, file_capacity=4096)
+        client = PSClient(cluster, [TableSpec(TABLE, RowSchema.embedding(DIM))])
+        rng = np.random.default_rng(0)
+        keys = np.arange(n_ads, dtype=np.uint64)
+        rows = _dyadic(rng, (n_ads, DIM))
+        cluster.push(keys, rows, unpin=False)
+        publisher = SnapshotPublisher(cluster, f"{tmp}/snap")
+        publisher.publish()
+
+        engine = client.serving_view(snapshots=publisher, cache_rows=4096)
+        t0 = time.perf_counter()
+        retr = RetrievalEngine(engine, TABLE)
+        build_s = time.perf_counter() - t0
+        emit("retrieval.index_build", build_s * 1e6,
+             f"rows={retr._index.n_rows};corpus={tuple(retr._index.corpus.shape)}")
+        results["index_build"] = {"seconds": build_s, "rows": n_ads}
+
+        queries = [_dyadic(rng, (batch, DIM)) for _ in range(n_requests)]
+
+        retr.search(queries[0], K)  # warm (jit compile)
+        best = float("inf")
+        lat_best = None
+        for _ in range(repeats):
+            lat = np.empty(n_requests)
+            t0 = time.perf_counter()
+            for i, q in enumerate(queries):
+                t1 = time.perf_counter()
+                retr.search(q, K)
+                lat[i] = time.perf_counter() - t1
+            total = time.perf_counter() - t0
+            if total < best:
+                best, lat_best = total, lat
+        n_q = n_requests * batch
+        qps = n_q / best
+        p50 = float(np.percentile(lat_best, 50)) * 1e6
+        p99 = float(np.percentile(lat_best, 99)) * 1e6
+        emit("retrieval.search", best / n_requests * 1e6,
+             f"qps={qps:.0f};p50_us={p50:.1f};p99_us={p99:.1f}")
+        results["search"] = {"qps": qps, "p50_us": p50, "p99_us": p99,
+                             "us_per_batch": best / n_requests * 1e6}
+
+        # recall@k vs the exact oracle — every request, score+index equality
+        hits = total_k = 0
+        exact = True
+        for q in queries:
+            res = retr.search(q, K)
+            want_v, want_i = kref.topk_mips_ref(q, rows, K)
+            want_v, want_i = np.asarray(want_v), np.asarray(want_i)
+            exact = exact and (np.array_equal(res.scores, want_v)
+                               and np.array_equal(res.indices, want_i))
+            for b in range(batch):
+                hits += len(np.intersect1d(res.indices[b], want_i[b]))
+                total_k += K
+        recall = hits / total_k
+        emit("retrieval.recall", recall, f"exact_match={exact};k={K}")
+        results["recall_at_k"] = {"recall": recall, "exact_match": exact}
+
+        # pallas kernel arm (interpret off-TPU): parity sample, not a timing
+        pal = RetrievalEngine(engine, TABLE, use_pallas=True,
+                              block_q=64, block_n=1024)
+        res = pal.search(queries[0][:8], K)
+        want_v, want_i = kref.topk_mips_ref(queries[0][:8], rows, K)
+        pal_exact = (np.array_equal(res.scores, np.asarray(want_v))
+                     and np.array_equal(res.indices, np.asarray(want_i)))
+        emit("retrieval.pallas_parity", float(pal_exact), "sample_queries=8")
+        results["pallas_parity_sample"] = bool(pal_exact)
+        pal.close()
+
+        # feature-interaction rerank stage
+        uk = rng.integers(0, n_ads, size=(batch, 8)).astype(np.uint64)
+        so = rng.integers(0, 4, size=(batch, 8)).astype(np.int32)
+        va = np.ones((batch, 8), bool)
+        res = retr.search(queries[0], K)
+        retr.rerank(res, uk, so, va, n_slots=4)  # warm
+        best_rr = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            retr.rerank(res, uk, so, va, n_slots=4)
+            best_rr = min(best_rr, time.perf_counter() - t0)
+        emit("retrieval.rerank", best_rr * 1e6, f"batch={batch};nnz=8")
+        results["rerank"] = {"us_per_batch": best_rr * 1e6}
+
+        results["counters"] = retr.counters.snapshot()
+        retr.close()
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    note(f"recorded -> {os.path.normpath(BENCH_JSON)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,13 +5,14 @@ Set BENCH_QUICK=1 for a fast pass.
 
 ``--smoke`` runs the MEM-PS hot-path bench, the pipeline-overlap bench, the
 multi-table session bench, the serving bench, the device train-step bench,
-the fault ride-through bench and the ingestion bench in quick mode (a few
-minutes) and refreshes ``BENCH_mem_ps.json`` + ``BENCH_pipeline.json`` +
-``BENCH_serving.json`` + ``BENCH_train_step.json`` + ``BENCH_faults.json``
-+ ``BENCH_ingest.json`` — the regression gates for PRs that touch the host
-hierarchy's batch path, the pipeline/overlap path, the client session
-layer, the serving subsystem, the device kernel layer, the fault machinery,
-or the ingestion subsystem.
+the fault ride-through bench, the ingestion bench and the retrieval bench
+in quick mode (a few minutes) and refreshes ``BENCH_mem_ps.json`` +
+``BENCH_pipeline.json`` + ``BENCH_serving.json`` + ``BENCH_train_step.json``
++ ``BENCH_faults.json`` + ``BENCH_ingest.json`` + ``BENCH_retrieval.json``
+— the regression gates for PRs that touch the host hierarchy's batch path,
+the pipeline/overlap path, the client session layer, the serving subsystem,
+the device kernel layer, the fault machinery, the ingestion subsystem, or
+the retrieval subsystem.
 """
 
 from __future__ import annotations
@@ -36,6 +37,7 @@ MODULES = [
     "benchmarks.bench_train_step",  # fused embedding-bag device step
     "benchmarks.bench_faults",  # fault ride-through + recovery (§9)
     "benchmarks.bench_ingest",  # streaming ingestion examples/s (§11)
+    "benchmarks.bench_retrieval",  # top-k MIPS QPS + recall@k (§12)
 ]
 
 SMOKE_MODULES = [
@@ -46,6 +48,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_train_step",
     "benchmarks.bench_faults",
     "benchmarks.bench_ingest",
+    "benchmarks.bench_retrieval",
 ]
 
 

@@ -47,6 +47,11 @@ LOCK_ORDER: tuple[LockSpec, ...] = (
         "transfer and device_put all run outside it (ingest/staging.py)",
     ),
     LockSpec(
+        "RetrievalEngine", "_lock", 11, True,
+        why="index binds/rolls only (manifest scan + corpus upload under "
+        "it by design); searches read the bound index without locking",
+    ),
+    LockSpec(
         "SnapshotPublisher", "_lock", 12, True,
         why="publish = flush_all + manifest write; serialized by design",
     ),

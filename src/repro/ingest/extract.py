@@ -16,8 +16,9 @@ slots hashed over the finished key, padding pinned to key 0 / slot 0.
 Pinned in tests/test_ingest.py.
 
 The pull/push stage still needs the batch's keys on host (the PS hierarchy
-is a host subsystem), so the extracted key plane makes one device→host hop —
-also modelled through the NIC so staging benches account for it. Everything
+is a host subsystem), so the extracted key pair planes make one device→host
+hop — also modelled through the NIC so staging benches account for it (two
+u32 planes = the same 8 bytes/key a u64 plane would be). Everything
 else (slot_of, valid, labels) stays device-resident: the transfer stage
 reshapes device arrays instead of re-uploading host ones.
 """
@@ -104,7 +105,7 @@ class DeviceIngestor:
                 "labels": np.asarray(raw.labels, dtype=np.float32),
             },
         )
-        keys_dev, slot_dev = kops.feature_extract(
+        hi_dev, lo_dev, slot_dev = kops.feature_extract(
             staged.tensors["raw_lo"],
             staged.tensors["raw_hi"],
             staged.tensors["valid"],
@@ -115,10 +116,14 @@ class DeviceIngestor:
             use_pallas=self.use_pallas,
             interpret=self.interpret,
         )
-        # the one device->host hop: the PS pull wants host u64 keys.
-        # np.asarray blocks until the extraction is done, so downstream
-        # stages never see a half-written plane.
-        keys = np.asarray(keys_dev).astype(np.uint64)
+        # the one device->host hop: the PS pull wants host u64 keys, so the
+        # two u32 planes (8 bytes/key, same wire cost as before the key
+        # space widened past 2^32) recombine here. np.asarray blocks until
+        # the extraction is done, so downstream stages never see a
+        # half-written plane.
+        keys = (
+            np.asarray(hi_dev).astype(np.uint64) << np.uint64(32)
+        ) | np.asarray(lo_dev).astype(np.uint64)
         if self.network is not None:
             self.network.transfer(int(keys.nbytes))
         self.counters.inc("ingest_examples", B)

@@ -15,15 +15,20 @@ u64 `splitmix64` (pinned in tests/test_ingest.py), which is what makes the
 whole extraction path bitwise-equal to the host feeder.
 
 The modulo (``hash % n_keys`` / ``% n_slots``) is a power-of-two mask when
-the modulus allows and otherwise a vectorized 64-step binary long division
-(`lax.fori_loop`, no 64-bit intermediates). Moduli must fit 31 bits — the
-container-scale key spaces do; paper-scale 1e11-key tables would grow the
-limb count, not the algorithm.
+the modulus allows and otherwise a vectorized binary long division
+(`lax.fori_loop`, no 64-bit intermediates). Two division widths:
+:func:`mod_pair` keeps the remainder in one u32 lane (moduli up to 2^32 —
+the ``(r << 1) | bit`` shift needs the top bit free, so the *loop* runs
+only for m <= 2^31 and the 2^31..2^32 range routes through the wide path);
+:func:`mod_pair_wide` carries the remainder as a (hi, lo) pair and covers
+any modulus below 2^63 — paper-scale 1e11-key tables (~2^37) included.
 
 The kernel itself is purely elementwise over ``[rows, 128]`` u32 planes
-(raw_lo, raw_hi, valid -> key, slot), so the grid is a flat 1-D sweep of
-(8, 128) tiles; ragged-nnz packing (valid masks from per-example lengths,
-pack-width truncation) is cheap jnp glue around it.
+(raw_lo, raw_hi, valid -> key_hi, key_lo, slot), so the grid is a flat 1-D
+sweep of (8, 128) tiles; ragged-nnz packing (valid masks from per-example
+lengths, pack-width truncation) is cheap jnp glue around it. Keys leave the
+kernel as a u32 pair for the same reason they enter as one — no u64 lanes —
+and the host side recombines them (``hi << 32 | lo``).
 """
 
 from __future__ import annotations
@@ -103,16 +108,24 @@ def splitmix64_pair(hi, lo, seed: int = 0):
 
 
 def mod_pair(hi, lo, m: int) -> jax.Array:
-    """``(hi * 2^32 + lo) % m`` as uint32, for a static modulus m <= 2^31.
+    """``(hi * 2^32 + lo) % m`` as uint32, for a static modulus m <= 2^32.
 
-    Power-of-two moduli reduce to a mask of the low word; the general case
-    is a 64-step vectorized binary long division — the remainder register
-    stays < m <= 2^31, so ``(r << 1) | bit`` never overflows u32.
+    Power-of-two moduli reduce to a mask of the low word. Up to 2^31 the
+    general case is a 64-step vectorized binary long division whose
+    remainder register stays < m <= 2^31, so ``(r << 1) | bit`` never
+    overflows u32; the 2^31..2^32 range loses that headroom and routes
+    through :func:`mod_pair_wide` instead (the remainder still fits one
+    u32). Wider moduli need the pair-valued :func:`mod_pair_wide`.
     """
-    if not 0 < m <= (1 << 31):
-        raise ValueError(f"modulus {m} must be in (0, 2^31] for u32-pair math")
+    if not 0 < m <= (1 << 32):
+        raise ValueError(
+            f"modulus {m} must be in (0, 2^32] for a u32 result; use "
+            "mod_pair_wide for wider moduli"
+        )
     if m & (m - 1) == 0:
         return lo & _u32(m - 1)  # x mod 2^k depends only on the low k bits
+    if m > (1 << 31):
+        return mod_pair_wide(hi, lo, m)[1]  # r < m <= 2^32: hi word is 0
 
     def body(i, r):
         word = jnp.where(i < 32, hi, lo)
@@ -124,33 +137,88 @@ def mod_pair(hi, lo, m: int) -> jax.Array:
     return jax.lax.fori_loop(0, 64, body, jnp.zeros_like(lo))
 
 
+def mod_pair_wide(hi, lo, m: int) -> tuple[jax.Array, jax.Array]:
+    """``(hi * 2^32 + lo) % m`` as a (hi, lo) u32 pair, for m < 2^63.
+
+    Same binary long division as :func:`mod_pair`, but the remainder is a
+    u32 pair: shift-left-with-carry ``r_hi = (r_hi << 1) | (r_lo >> 31)``,
+    pair compare, borrow subtract. The headroom argument that bounds the
+    narrow loop at 2^31 bounds this one at 2^63 — ``r < m < 2^63`` keeps
+    ``r_hi < 2^31``, so the carry shift never drops a bit. (2^63 itself is
+    a power of two and reduces to the mask fast path.)
+    """
+    if not 0 < m <= (1 << 63):
+        raise ValueError(f"modulus {m} must be in (0, 2^63] for pair math")
+    if m & (m - 1) == 0:
+        mk_hi, mk_lo = _const_pair(m - 1)
+        return hi & _u32(mk_hi), lo & _u32(mk_lo)
+    m_hi, m_lo = _const_pair(m)
+
+    def body(i, carry):
+        r_hi, r_lo = carry
+        word = jnp.where(i < 32, hi, lo)
+        sh = (_u32(31) - (_u32(i) & _u32(31))).astype(jnp.uint32)
+        bit = (word >> sh) & _u32(1)
+        r_hi = (r_hi << _u32(1)) | (r_lo >> _u32(31))
+        r_lo = (r_lo << _u32(1)) | bit
+        ge = (r_hi > _u32(m_hi)) | ((r_hi == _u32(m_hi)) & (r_lo >= _u32(m_lo)))
+        borrow = (r_lo < _u32(m_lo)).astype(jnp.uint32)
+        s_hi = r_hi - _u32(m_hi) - borrow
+        s_lo = r_lo - _u32(m_lo)
+        return jnp.where(ge, s_hi, r_hi), jnp.where(ge, s_lo, r_lo)
+
+    z = jnp.zeros_like(lo)
+    return jax.lax.fori_loop(0, 64, body, (z, z))
+
+
 def hash_mod_pair(hi, lo, seed: int, m: int) -> jax.Array:
-    """``hash_keys(x, seed) % m`` on u32 pairs -> u32 (m <= 2^31)."""
+    """``hash_keys(x, seed) % m`` on u32 pairs -> u32 (m <= 2^32)."""
     h_hi, h_lo = splitmix64_pair(hi, lo, seed)
     return mod_pair(h_hi, h_lo, m)
 
 
+def hash_mod_pair_wide(hi, lo, seed: int, m: int) -> tuple[jax.Array, jax.Array]:
+    """``hash_keys(x, seed) % m`` on u32 pairs -> u32 pair (m <= 2^63)."""
+    h_hi, h_lo = splitmix64_pair(hi, lo, seed)
+    return mod_pair_wide(h_hi, h_lo, m)
+
+
 # ------------------------------------------------------- the extraction op
 def _extract_math(raw_hi, raw_lo, valid_u32, *, n_keys, n_slots, key_seed, slot_seed):
-    """Shared elementwise core: raw id pair + valid mask -> (key, slot).
+    """Shared elementwise core: raw id pair + valid mask ->
+    (key_hi, key_lo, slot).
 
     Bitwise contract (`repro.data.synthetic_ctr.extract_host`): the slot
     hash is taken over the *modded* key (matching the host feeder, which
-    hashes the finished key), and padded positions carry key 0 / slot 0.
+    hashes the finished u64 key), and padded positions carry key 0 /
+    slot 0. Keys are a u32 pair so ``n_keys`` may exceed 2^32 (paper-scale
+    1e11-key tables); when it doesn't, the high plane is identically zero
+    and the narrow division runs instead of the pair one.
     """
-    key = hash_mod_pair(raw_hi, raw_lo, key_seed, n_keys)  # < n_keys <= 2^31
-    slot = hash_mod_pair(jnp.zeros_like(key), key, slot_seed, n_slots)
+    h_hi, h_lo = splitmix64_pair(raw_hi, raw_lo, key_seed)
+    if n_keys <= (1 << 32):
+        key_lo = mod_pair(h_hi, h_lo, n_keys)
+        key_hi = jnp.zeros_like(key_lo)
+    else:
+        key_hi, key_lo = mod_pair_wide(h_hi, h_lo, n_keys)
+    slot = hash_mod_pair(key_hi, key_lo, slot_seed, n_slots)
     live = valid_u32 != 0
-    return jnp.where(live, key, 0), jnp.where(live, slot, 0).astype(jnp.int32)
+    return (
+        jnp.where(live, key_hi, 0),
+        jnp.where(live, key_lo, 0),
+        jnp.where(live, slot, 0).astype(jnp.int32),
+    )
 
 
-def _extract_kernel(raw_lo_ref, raw_hi_ref, valid_ref, key_ref, slot_ref,
+def _extract_kernel(raw_lo_ref, raw_hi_ref, valid_ref,
+                    key_hi_ref, key_lo_ref, slot_ref,
                     *, n_keys, n_slots, key_seed, slot_seed):
-    key, slot = _extract_math(
+    key_hi, key_lo, slot = _extract_math(
         raw_hi_ref[...], raw_lo_ref[...], valid_ref[...],
         n_keys=n_keys, n_slots=n_slots, key_seed=key_seed, slot_seed=slot_seed,
     )
-    key_ref[...] = key
+    key_hi_ref[...] = key_hi
+    key_lo_ref[...] = key_lo
     slot_ref[...] = slot
 
 
@@ -168,8 +236,9 @@ def feature_extract_pallas(
     key_seed: int = 17,
     slot_seed: int = 31,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:
-    """Fused hash + slot-bucket kernel -> (keys u32 [B, P], slot_of i32 [B, P])."""
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused hash + slot-bucket kernel ->
+    (keys_hi u32 [B, P], keys_lo u32 [B, P], slot_of i32 [B, P])."""
     B, P = raw_lo.shape
     n = B * P
     lane = _BLOCK_ROWS * 128
@@ -183,15 +252,17 @@ def feature_extract_pallas(
         n_keys=n_keys, n_slots=n_slots, key_seed=key_seed, slot_seed=slot_seed,
     )
     spec = pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0))
-    keys, slots = pl.pallas_call(
+    keys_hi, keys_lo, slots = pl.pallas_call(
         kernel,
         grid=(rows // _BLOCK_ROWS,),
         in_specs=[spec, spec, spec],
         out_specs=[
             pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0)),
             pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0)),
+            pl.BlockSpec((_BLOCK_ROWS, 128), lambda i: (i, 0)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((rows, 128), jnp.uint32),
             jax.ShapeDtypeStruct((rows, 128), jnp.uint32),
             jax.ShapeDtypeStruct((rows, 128), jnp.int32),
         ],
@@ -202,7 +273,7 @@ def feature_extract_pallas(
         plane((jnp.asarray(valid).reshape(-1) != 0), jnp.uint32),
     )
     unpack = lambda x: x.reshape(-1)[:n].reshape(B, P)
-    return unpack(keys), unpack(slots)
+    return unpack(keys_hi), unpack(keys_lo), unpack(slots)
 
 
 @functools.partial(
@@ -218,7 +289,7 @@ def feature_extract_portable(
     n_slots: int,
     key_seed: int = 17,
     slot_seed: int = 31,
-) -> tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Same math as the kernel, lowered as plain jnp (any backend)."""
     return _extract_math(
         jnp.asarray(raw_hi, jnp.uint32),

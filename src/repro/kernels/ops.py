@@ -36,6 +36,7 @@ from repro.kernels.feature_extract import (
 from repro.kernels.fused_adagrad import adagrad_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.scatter_add import scatter_add_pallas
+from repro.kernels.topk_mips import topk_mips_pallas
 
 
 def _on_tpu() -> bool:
@@ -234,12 +235,16 @@ def feature_extract(
     use_pallas: bool | None = None,
     interpret: bool | None = None,
 ):
-    """Device feature extraction: raw ids -> (keys u32, slot_of i32).
+    """Device feature extraction:
+    raw ids -> (keys_hi u32, keys_lo u32, slot_of i32).
 
     The ingest pipeline's hot op: two rounds of splitmix64 (as u32-pair
     math — TPUs have no 64-bit lanes) plus a modulo each, bitwise-equal to
     the host feeder's ``hash_keys(raw) % n_keys`` / ``% n_slots`` numpy
-    path. Padded positions come back as key 0 / slot 0.
+    path. Keys come back as a u32 pair (``hi << 32 | lo`` on host) so
+    ``n_keys`` may exceed 2^32 — paper-scale 1e11-key spaces; for small
+    key spaces the hi plane is identically zero. Padded positions come
+    back as key 0 / slot 0.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -255,6 +260,43 @@ def feature_extract(
         n_keys=n_keys, n_slots=n_slots,
         key_seed=key_seed, slot_seed=slot_seed,
     )
+
+
+# --------------------------------------------------------------------------
+# blocked top-k MIPS (retrieval subsystem, DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+
+def topk_mips(
+    queries,  # [Q, D] f32 query vectors
+    corpus,  # [N, D] f32 corpus rows (row i = corpus id i)
+    k: int,
+    *,
+    n_valid: int | None = None,
+    block_q: int = 128,
+    block_n: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Top-k maximum-inner-product search -> (scores [Q, k], indices [Q, k]).
+
+    The retrieval subsystem's scoring op: on TPU the blocked Pallas kernel
+    (corpus streams through the MXU, running top-k stays VMEM-resident),
+    elsewhere the full-score-matrix oracle. Both follow the same contract:
+    descending score, ties by ascending corpus index, positions past the
+    live corpus (``n_valid``, default all of ``corpus``) come back as
+    (-inf, -1).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return topk_mips_pallas(
+            queries, corpus, int(k),
+            n_valid=None if n_valid is None else int(n_valid),
+            block_q=block_q, block_n=block_n,
+            interpret=not _on_tpu() if interpret is None else interpret,
+        )
+    return _ref.topk_mips_ref(queries, corpus, int(k), n_valid=n_valid)
 
 
 # --------------------------------------------------------------------------

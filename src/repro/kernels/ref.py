@@ -86,6 +86,41 @@ def attention_ref(
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def topk_mips_ref(
+    queries: jax.Array,  # [Q, D]
+    corpus: jax.Array,  # [N, D]
+    k: int,
+    n_valid: int | None = None,  # live corpus prefix; rows >= n_valid masked
+) -> tuple[jax.Array, jax.Array]:
+    """Brute-force top-k maximum-inner-product search, the retrieval
+    contract: (scores f32 [Q, k], indices i32 [Q, k]) sorted by descending
+    score with ties broken by **ascending corpus index** (stable argsort),
+    positions past the live corpus padded with (-inf, -1).
+
+    Also the portable fallback `kernels.ops.topk_mips` dispatches to — at
+    serving corpus sizes the full [Q, N] score matrix fits comfortably."""
+    queries = jnp.asarray(queries, jnp.float32)
+    corpus = jnp.asarray(corpus, jnp.float32)
+    N = corpus.shape[0]
+    n = N if n_valid is None else int(n_valid)
+    scores = jax.lax.dot_general(
+        queries, corpus,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, N]
+    live = jnp.arange(N, dtype=jnp.int32)[None, :] < min(n, N)
+    scores = jnp.where(live, scores, -jnp.inf)
+    kk = min(int(k), N)
+    order = jnp.argsort(-scores, axis=1, stable=True)[:, :kk].astype(jnp.int32)
+    vals = jnp.take_along_axis(scores, order, axis=1)
+    idx = jnp.where(jnp.isneginf(vals), -1, order)
+    if k > N:
+        pad = ((0, 0), (0, int(k) - N))
+        vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+        idx = jnp.pad(idx, pad, constant_values=-1)
+    return vals, idx
+
+
 def gmm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
     """Grouped matmul oracle: rows of x are grouped contiguously by expert.
 

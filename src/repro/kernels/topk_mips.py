@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: blocked maximum-inner-product search with streaming
+top-k (the retrieval subsystem's hot op, DESIGN.md §12).
+
+Brute-force MIPS over a snapshot's embedding table: score every corpus row
+against every query (one MXU matmul per (query tile, corpus block) pair) and
+keep a running per-query top-k as the grid sweeps corpus blocks. At ads
+scale this beats ANN indexes because the corpus streams through the MXU at
+full bandwidth while the top-k state — a ``[block_q, kp]`` (value, index)
+pair — stays VMEM-resident across the whole corpus sweep (the innermost
+grid axis revisits the same output block, the same residency trick as the
+embedding-bag kernel's pooled tile).
+
+Grid layout: ``(n_query_tiles, n_corpus_blocks)`` with the corpus axis
+innermost. Each step computes ``scores = q_tile @ corpus_block.T``
+([block_q, block_n] f32 on the MXU), masks padded corpus rows to -inf, and
+merges the block into the running top-k with a k-step selection loop:
+every step extracts the best remaining candidate — maximum score, ties
+broken by **minimum corpus index** — so the output ordering is fully
+deterministic and block-size independent. Selected entries are retired to
+(-inf, INT32_MAX), which makes them indistinguishable from padding; the
+wrapper maps any -inf survivor to index -1.
+
+Exactness: each score is ONE dot product over the full (lane-padded)
+feature dim — scores are never accumulated across grid steps — so the only
+f32 caveat vs the jnp oracle is reduction order inside a single dot.
+Corpus/query values on a dyadic grid (e.g. int8-quantized embeddings)
+make kernel and oracle bitwise equal; tests and the recall@k bench pin
+exactly that.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INT32_MAX = 2**31 - 1  # retired/padding index sentinel inside the kernel
+_LANE = 128
+
+
+def _mips_kernel(q_ref, c_ref, vals_ref, idx_ref, *, k, kp, block_n, n_valid):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():  # fresh query tile: empty running top-k
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, jnp.float32)
+        idx_ref[...] = jnp.full(idx_ref.shape, _INT32_MAX, jnp.int32)
+
+    scores = jax.lax.dot_general(
+        q_ref[...], c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [block_q, block_n]
+    gidx = j * block_n + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    live = gidx < n_valid
+    scores = jnp.where(live, scores, -jnp.inf)
+    gidx = jnp.where(live, gidx, _INT32_MAX)
+
+    # candidates = running top-k (disjoint indices: every corpus row lives
+    # in exactly one block) ∪ this block's scores
+    cand_vals = jnp.concatenate([vals_ref[...], scores], axis=1)
+    cand_idx = jnp.concatenate([idx_ref[...], gidx], axis=1)
+    bq = cand_vals.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, kp), 1)
+
+    def select_one(t, carry):
+        cv, ci, nv, ni = carry
+        best = jnp.max(cv, axis=1, keepdims=True)
+        # deterministic ties: the smallest index among score == best
+        bi = jnp.min(jnp.where(cv == best, ci, _INT32_MAX), axis=1, keepdims=True)
+        nv = jnp.where(col == t, best, nv)
+        ni = jnp.where(col == t, bi, ni)
+        taken = (cv == best) & (ci == bi)
+        return (
+            jnp.where(taken, -jnp.inf, cv),
+            jnp.where(taken, _INT32_MAX, ci),
+            nv,
+            ni,
+        )
+
+    _, _, new_vals, new_idx = jax.lax.fori_loop(
+        0, k, select_one,
+        (
+            cand_vals,
+            cand_idx,
+            jnp.full((bq, kp), -jnp.inf, jnp.float32),
+            jnp.full((bq, kp), _INT32_MAX, jnp.int32),
+        ),
+    )
+    vals_ref[...] = new_vals
+    idx_ref[...] = new_idx
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_valid", "block_q", "block_n", "interpret"),
+)
+def topk_mips_pallas(
+    queries: jax.Array,  # [Q, D] f32 query vectors
+    corpus: jax.Array,  # [N, D] f32 corpus rows (index i = corpus id i)
+    k: int,
+    *,
+    n_valid: int | None = None,  # live corpus prefix; rows >= n_valid masked
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k inner products -> (scores f32 [Q, k], indices i32 [Q, k]).
+
+    Rows are sorted by descending score, ties by ascending corpus index;
+    positions past the live corpus size come back as (-inf, -1).
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    Q, D = queries.shape
+    N = corpus.shape[0]
+    n = N if n_valid is None else int(n_valid)
+    Dp = max(_LANE, math.ceil(D / _LANE) * _LANE)
+    Qp = max(block_q, math.ceil(Q / block_q) * block_q)
+    Np = max(block_n, math.ceil(N / block_n) * block_n)
+    kp = max(_LANE, math.ceil(k / _LANE) * _LANE)
+    qp = jnp.pad(queries.astype(jnp.float32), ((0, Qp - Q), (0, Dp - D)))
+    cp = jnp.pad(corpus.astype(jnp.float32), ((0, Np - N), (0, Dp - D)))
+    kernel = functools.partial(
+        _mips_kernel, k=k, kp=kp, block_n=block_n, n_valid=min(n, N)
+    )
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(Qp // block_q, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((block_q, Dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, Dp), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, kp), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, cp)
+    vals, idx = vals[:Q, :k], idx[:Q, :k]
+    return vals, jnp.where(idx == _INT32_MAX, -1, idx)

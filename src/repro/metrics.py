@@ -30,6 +30,11 @@ KNOWN_COUNTERS = frozenset({
     # are integer microseconds (counters are int-only)
     "ingest_batches", "ingest_examples", "staging_bytes",
     "ingest_wait_us", "ingest_overlap_us", "ingest_drained",
+    # ad retrieval (retrieval/engine.py RETRIEVAL_COUNTER_NAMES)
+    "retrieval_searches", "retrieval_queries", "retrieval_candidates",
+    "retrieval_rows_scored", "retrieval_index_builds",
+    "retrieval_index_rows", "retrieval_rolls", "retrieval_reranks",
+    "retrieval_rerank_rows",
 })
 
 

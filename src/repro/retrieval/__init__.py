@@ -1,0 +1,24 @@
+"""Embedding-based ad retrieval over versioned snapshots (DESIGN.md §12).
+
+Public surface:
+
+* :class:`RetrievalIndex` — one (table, snapshot version)'s embedding rows
+  as a device-resident, lane-aligned corpus.
+* :class:`RetrievalEngine` — versioned ``search(queries, k)`` via the
+  blocked Pallas MIPS kernel + feature-interaction ``rerank``.
+* :class:`RetrievalResult` — one search's (scores, indices, ad_keys).
+"""
+
+from repro.retrieval.engine import (
+    RETRIEVAL_COUNTER_NAMES,
+    RetrievalEngine,
+    RetrievalResult,
+)
+from repro.retrieval.index import RetrievalIndex
+
+__all__ = [
+    "RETRIEVAL_COUNTER_NAMES",
+    "RetrievalEngine",
+    "RetrievalIndex",
+    "RetrievalResult",
+]

@@ -1,0 +1,116 @@
+"""RetrievalIndex: one snapshot version's embedding table, device-resident.
+
+The index side of the retrieval subsystem (DESIGN.md §12): materialize a
+named table's live rows out of a published :class:`ServingVersion` into a
+lane-aligned corpus the blocked MIPS kernel can stream.
+
+Build protocol:
+
+1. **Manifest scan** — iterate every node view's ``iter_live()`` (the same
+   corruption-safe primitive reshard/checkpoint use) and keep rows whose
+   high-bit key tag matches the table; only the schema's ``emb`` field
+   (the row prefix) enters the corpus — optimizer slots never ship to the
+   device.
+2. **Deterministic corpus order** — rows sort by raw (un-namespaced) ad
+   key ascending, so corpus index ``i`` maps to one key independent of
+   node count, file layout, or scan order. The kernel's tie-breaking
+   (minimum corpus index) therefore has a stable meaning across rebuilds.
+3. **Lane alignment** — the corpus pads to ``block_n`` rows x 128-lane
+   feature columns and moves to device once; ``n_rows`` marks the live
+   prefix and the kernel masks everything past it.
+
+The index pins the :class:`ServingVersion` object it was built from
+(``view``) — rerank reads go through that exact view — and optionally a
+set of per-node retention-ref'd file paths (``retained``) the engine takes
+on the *training* cluster's SSDs so compaction can never delete a file the
+bound snapshot still points at.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.keys import split_namespaced
+
+_LANE = 128
+
+
+class RetrievalIndex:
+    """Device-resident corpus blocks for one (table, snapshot version)."""
+
+    def __init__(
+        self,
+        *,
+        table: str,
+        version: int,
+        view,
+        keys: np.ndarray,
+        corpus,
+        n_rows: int,
+        dim: int,
+        block_n: int,
+        retained: "dict[int, list[str]] | None" = None,
+    ):
+        self.table = table
+        self.version = int(version)
+        self.view = view  # the pinned ServingVersion (rerank reads use it)
+        self.keys = keys  # uint64 [n_rows] corpus row -> raw ad key, ascending
+        self.corpus = corpus  # jnp f32 [Np, Dp] lane-aligned device corpus
+        self.n_rows = int(n_rows)
+        self.dim = int(dim)
+        self.block_n = int(block_n)
+        self.retained = retained
+
+    @classmethod
+    def build(cls, source, table: str, *, block_n: int = 512, view=None) -> "RetrievalIndex":
+        """Scan ``view`` (default: ``source.acquire()``) for the table's
+        live rows and materialize the device corpus. ``source`` must be a
+        snapshot-backed :class:`~repro.serve.snapshot.ServingCluster` —
+        a live training view has no immutable version to bind."""
+        if view is None:
+            view = source.acquire()
+        if not hasattr(view, "ssd"):
+            raise TypeError(
+                "retrieval indexes bind to published snapshot versions; "
+                "serve from a ServingCluster (SnapshotPublisher.publish + "
+                "PSClient.serving_view(snapshots=...)), not the live cluster"
+            )
+        spec = view.tables.require(table)
+        if spec.table_id is None:
+            raise ValueError(f"table {table!r} has no assigned id")
+        emb = spec.schema.emb_dim
+        key_parts: list[np.ndarray] = []
+        row_parts: list[np.ndarray] = []
+        for ssd in view.ssd:
+            for fkeys, fvals in ssd.iter_live():
+                tids, raw = split_namespaced(fkeys)
+                m = tids == spec.table_id
+                if m.any():
+                    key_parts.append(raw[m])
+                    row_parts.append(np.asarray(fvals[m, :emb], dtype=np.float32))
+        if key_parts:
+            keys = np.concatenate(key_parts)
+            rows = np.concatenate(row_parts)
+            order = np.argsort(keys, kind="stable")
+            keys, rows = keys[order], rows[order]
+        else:
+            keys = np.zeros(0, dtype=np.uint64)
+            rows = np.zeros((0, emb), dtype=np.float32)
+        n = len(keys)
+        n_pad = max(block_n, math.ceil(n / block_n) * block_n)
+        d_pad = max(_LANE, math.ceil(emb / _LANE) * _LANE)
+        padded = np.zeros((n_pad, d_pad), dtype=np.float32)
+        padded[:n, :emb] = rows
+        return cls(
+            table=table,
+            version=view.version,
+            view=view,
+            keys=keys,
+            corpus=jnp.asarray(padded),
+            n_rows=n,
+            dim=emb,
+            block_n=block_n,
+        )

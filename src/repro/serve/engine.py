@@ -429,6 +429,23 @@ class ServingEngine:
             raise req.err
         return req.out
 
+    def lookup_at(self, table: str, keys, *, view=None) -> np.ndarray:
+        """Version-pinned lookup: like :meth:`lookup` but served entirely
+        from ``view`` (an acquired source version; default: the active one)
+        and without coalescing. The retrieval rerank path reads user-side
+        rows at the exact version its index was built on, so a concurrent
+        ``roll_forward`` can never mix versions inside one scored request.
+        Rows still read through the version-keyed hot cache."""
+        req = self._make_req(table, keys)
+        self.counters.inc("lookups")
+        if view is None:
+            view = self.source.acquire()
+        uniq, inverse = np.unique(req.keys, return_inverse=True)
+        rows = self._rows_for(view, uniq)
+        self.counters.inc("rows_served", len(req.keys))
+        emb = req.spec.schema.emb_dim
+        return rows[inverse][:, :emb].reshape(req.shape + (emb,))
+
     def lookup_many(self, requests: "list[tuple[str, np.ndarray]]") -> list[np.ndarray]:
         """Serve N streams' lookups as one merged batch (deterministic
         coalescing: one deduped pull for the union of all keys)."""

@@ -29,6 +29,7 @@ from repro.kernels.feature_extract import (
     feature_extract_pallas,
     feature_extract_portable,
     mod_pair,
+    mod_pair_wide,
     splitmix64_pair,
 )
 from repro.metrics import KNOWN_COUNTERS, Counters
@@ -71,7 +72,10 @@ def test_mod_pair_matches_numpy():
     rng = np.random.default_rng(1)
     x = np.concatenate([_EDGE_U64, _rand_u64(rng, 256)])
     hi, lo = _pairs(x)
-    for m in (1, 2, 3, 7, 25, 127, 128, 4096, 600_000, 2**31 - 1, 2**31):
+    # u32-result range: the narrow loop up to 2^31, the wide-backed tail
+    # (2^31, 2^32] that used to be rejected
+    for m in (1, 2, 3, 7, 25, 127, 128, 4096, 600_000, 2**31 - 1, 2**31,
+              2**31 + 1, 2**32 - 5, 2**32):
         np.testing.assert_array_equal(
             np.asarray(mod_pair(hi, lo, m)).astype(np.uint64),
             x % np.uint64(m),
@@ -79,10 +83,29 @@ def test_mod_pair_matches_numpy():
         )
 
 
-def test_mod_pair_rejects_wide_modulus():
+def test_mod_pair_wide_matches_numpy():
+    """Paper-scale moduli (1e11-key spaces and beyond, up to 2^63): the
+    pair-remainder long division is bit-exact against numpy u64."""
+    rng = np.random.default_rng(6)
+    x = np.concatenate([_EDGE_U64, _rand_u64(rng, 256)])
+    hi, lo = _pairs(x)
+    for m in (3, 600_000, 2**31, 2**31 + 1, 2**32 - 1, 2**32, 2**32 + 1,
+              10**11, 10**11 + 7, 2**48 - 59, 2**62 + 11, 2**63 - 25, 2**63):
+        got_hi, got_lo = mod_pair_wide(hi, lo, m)
+        got = (np.asarray(got_hi).astype(np.uint64) << np.uint64(32)) | np.asarray(
+            got_lo
+        ).astype(np.uint64)
+        np.testing.assert_array_equal(got, x % np.uint64(m), err_msg=f"modulus {m}")
+
+
+def test_mod_pair_rejects_out_of_range_modulus():
     hi, lo = _pairs(_EDGE_U64)
     with pytest.raises(ValueError):
-        mod_pair(hi, lo, 2**31 + 1)
+        mod_pair(hi, lo, 2**32 + 1)  # result would not fit one u32
+    with pytest.raises(ValueError):
+        mod_pair_wide(hi, lo, 2**63 + 1)  # carry shift would drop a bit
+    with pytest.raises(ValueError):
+        mod_pair_wide(hi, lo, 0)
 
 
 # ------------------------------------------------- device extraction parity
@@ -99,8 +122,11 @@ def _assert_extract_parity(raw, lengths, n_keys, n_slots):
         ),
         lambda: kops.feature_extract(lo, hi, valid, n_keys=n_keys, n_slots=n_slots),
     ):
-        got_k, got_s = fn()
-        np.testing.assert_array_equal(np.asarray(got_k).astype(np.uint64), want_k)
+        got_hi, got_lo, got_s = fn()
+        got_k = (np.asarray(got_hi).astype(np.uint64) << np.uint64(32)) | np.asarray(
+            got_lo
+        ).astype(np.uint64)
+        np.testing.assert_array_equal(got_k, want_k)
         np.testing.assert_array_equal(np.asarray(got_s), want_s)
 
 
@@ -126,6 +152,21 @@ def test_feature_extract_empty_examples():
     want_k, want_s, want_v = extract_host(raw, lengths, 1000, 8)
     assert not want_v.any() and not want_k.any() and not want_s.any()
     _assert_extract_parity(raw, lengths, 1000, 8)
+
+
+def test_feature_extract_paper_scale_key_space():
+    """n_keys past 2^32 (the paper's 1e11-key regime): keys come back as a
+    real u32 pair — the high plane carries live bits — and all three device
+    arms stay bitwise-equal to the host feeder."""
+    rng = np.random.default_rng(7)
+    raw = _rand_u64(rng, 32 * 8).reshape(32, 8)
+    lengths = rng.integers(0, 9, 32).astype(np.int32)
+    for n_keys in (10**11, 2**36 - 5):
+        _assert_extract_parity(raw, lengths, n_keys, 25)
+        want_k, _, _ = extract_host(raw, lengths, n_keys, 25)
+        assert (want_k >> np.uint64(32)).any(), (
+            "test vector too small to exercise the high key plane"
+        )
 
 
 def test_extract_host_golden_values():

@@ -1,0 +1,348 @@
+"""Retrieval subsystem semantics (DESIGN.md §12).
+
+Pins the acceptance contract of the top-k MIPS stack:
+
+* the blocked Pallas kernel is **bitwise-equal** to the pure-jnp oracle
+  (``kernels.ref.topk_mips_ref``) — scores and indices, deterministic
+  tie-breaking (score desc, corpus index asc), (-inf, -1) padding when k
+  exceeds the live corpus — under ``interpret=True`` on dyadic-grid inputs
+  (every score is one dot over the full feature dim, never accumulated
+  across grid steps, so quantized embeddings make f32 exact);
+* ``RetrievalIndex.build`` materializes exactly one table's live rows from
+  a published snapshot, in ascending raw-key order, lane-padded;
+* ``RetrievalEngine.search`` equals the oracle on the bound version, and a
+  concurrent ``roll_forward`` is atomic — every in-flight search matches
+  the oracle of the single version it reports;
+* retention refs keep the bound snapshot's files readable across training
+  compaction, and ``close`` releases them;
+* rerank re-scores deterministically and reads user rows at the pinned
+  version; retrieval counters flow through metrics.Counters.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.client import PSClient
+from repro.core.node import Cluster
+from repro.core.tables import RowSchema, TableSpec
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.topk_mips import topk_mips_pallas
+from repro.metrics import KNOWN_COUNTERS, Counters
+from repro.retrieval import RETRIEVAL_COUNTER_NAMES, RetrievalEngine, RetrievalIndex
+from repro.serve import SnapshotPublisher
+
+DIM = 8
+N_ADS = 300
+
+
+def _dyadic(rng, shape):
+    """f32 values on a 1/64 grid: blocked and full matmuls agree bitwise."""
+    return (rng.integers(-128, 128, size=shape) / 64.0).astype(np.float32)
+
+
+def _pad_cols(x, d):
+    return np.pad(x, ((0, 0), (0, d - x.shape[1])))
+
+
+# ------------------------------------------------------- kernel vs oracle
+
+
+def _assert_kernel_matches_oracle(q, c, k, *, n_valid=None, block_q=8, block_n=64):
+    got_v, got_i = topk_mips_pallas(
+        q, c, k, n_valid=n_valid, block_q=block_q, block_n=block_n, interpret=True
+    )
+    want_v, want_i = kref.topk_mips_ref(q, c, k, n_valid=n_valid)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_topk_kernel_matches_oracle_sweep():
+    rng = np.random.default_rng(0)
+    for qn, n, d, k in ((5, 200, 8, 10), (1, 64, 16, 1), (17, 130, 4, 7),
+                        (8, 64, 8, 64)):
+        _assert_kernel_matches_oracle(
+            _dyadic(rng, (qn, d)), _dyadic(rng, (n, d)), k
+        )
+
+
+def test_topk_kernel_deterministic_tie_breaking():
+    rng = np.random.default_rng(1)
+    base = _dyadic(rng, (40, DIM))
+    # every corpus row appears 4x: ties must resolve to the smallest index
+    c = np.tile(base, (4, 1))
+    q = _dyadic(rng, (6, DIM))
+    got_v, got_i = topk_mips_pallas(q, c, 8, block_q=8, block_n=32, interpret=True)
+    got_v, got_i = np.asarray(got_v), np.asarray(got_i)
+    _assert_kernel_matches_oracle(q, c, 8, block_n=32)
+    # within each query, equal scores must carry strictly ascending indices
+    for b in range(6):
+        for a in range(7):
+            if got_v[b, a] == got_v[b, a + 1]:
+                assert got_i[b, a] < got_i[b, a + 1]
+
+
+def test_topk_k_exceeds_corpus_pads_with_sentinels():
+    rng = np.random.default_rng(2)
+    q, c = _dyadic(rng, (3, DIM)), _dyadic(rng, (10, DIM))
+    got_v, got_i = topk_mips_pallas(q, c, 16, block_q=8, block_n=8, interpret=True)
+    got_v, got_i = np.asarray(got_v), np.asarray(got_i)
+    _assert_kernel_matches_oracle(q, c, 16, block_n=8)
+    assert np.isneginf(got_v[:, 10:]).all() and (got_i[:, 10:] == -1).all()
+    assert (got_i[:, :10] >= 0).all()
+
+
+def test_topk_n_valid_masks_corpus_tail():
+    rng = np.random.default_rng(3)
+    q, c = _dyadic(rng, (4, DIM)), _dyadic(rng, (96, DIM))
+    _assert_kernel_matches_oracle(q, c, 12, n_valid=50, block_n=32)
+    got_v, got_i = topk_mips_pallas(
+        q, c, 12, n_valid=50, block_q=8, block_n=32, interpret=True
+    )
+    assert (np.asarray(got_i) < 50).all()  # masked tail can never surface
+
+
+def test_topk_ragged_query_batches():
+    rng = np.random.default_rng(4)
+    c = _dyadic(rng, (64, DIM))
+    for qn in (1, 7, 9):  # none a multiple of block_q
+        _assert_kernel_matches_oracle(_dyadic(rng, (qn, DIM)), c, 5, block_q=8)
+
+
+def test_topk_rejects_bad_k():
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError):
+        topk_mips_pallas(_dyadic(rng, (2, DIM)), _dyadic(rng, (8, DIM)), 0,
+                         interpret=True)
+
+
+def test_topk_dispatcher_arms_agree():
+    rng = np.random.default_rng(6)
+    q, c = _dyadic(rng, (5, DIM)), _dyadic(rng, (70, DIM))
+    ref_v, ref_i = kops.topk_mips(q, c, 6, use_pallas=False)
+    pal_v, pal_i = kops.topk_mips(q, c, 6, use_pallas=True, interpret=True,
+                                  block_q=8, block_n=32)
+    np.testing.assert_array_equal(np.asarray(pal_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(pal_i), np.asarray(ref_i))
+
+
+# ------------------------------------------------------------ index build
+
+
+@pytest.fixture
+def setup(tmp_path):
+    cluster = Cluster(2, str(tmp_path / "train"), dim=2 * DIM,
+                      cache_capacity=1024, file_capacity=64, init_cols=DIM)
+    client = PSClient(cluster, [
+        TableSpec("ads", RowSchema.with_adagrad(DIM)),
+        TableSpec("user", RowSchema.with_adagrad(DIM)),
+    ])
+    rng = np.random.default_rng(7)
+    keys = np.arange(N_ADS, dtype=np.uint64)
+    rows = _dyadic(rng, (N_ADS, DIM))
+    full = np.zeros((N_ADS, 2 * DIM), np.float32)
+    full[:, :DIM] = rows
+    ads = client.registry.get("ads")
+    cluster.push(ads.namespace(keys), full, unpin=False)
+    # a second table in the same key range: the index must filter it out
+    user = client.registry.get("user")
+    ufull = np.full((40, 2 * DIM), 9.0, np.float32)
+    cluster.push(user.namespace(np.arange(40, dtype=np.uint64)), ufull,
+                 unpin=False)
+    pub = SnapshotPublisher(cluster, str(tmp_path / "snap"))
+    pub.publish()
+    return cluster, client, pub, keys, rows
+
+
+def _engine(client, pub, **kw):
+    eng = client.serving_view(snapshots=pub, cache_rows=1024)
+    kw.setdefault("block_q", 8)
+    kw.setdefault("block_n", 64)
+    kw.setdefault("use_pallas", True)
+    kw.setdefault("interpret", True)
+    return RetrievalEngine(eng, "ads", **kw)
+
+
+def test_index_build_filters_sorts_and_pads(setup):
+    cluster, client, pub, keys, rows = setup
+    src = client.serving_view(snapshots=pub).source
+    idx = RetrievalIndex.build(src, "ads", block_n=64)
+    assert idx.n_rows == N_ADS and idx.dim == DIM and idx.version == 1
+    np.testing.assert_array_equal(idx.keys, keys)  # ascending raw keys
+    corpus = np.asarray(idx.corpus)
+    assert corpus.shape == (320, 128)  # 64-row blocks x 128-lane columns
+    np.testing.assert_array_equal(corpus[:N_ADS, :DIM], rows)
+    assert not corpus[N_ADS:].any() and not corpus[:, DIM:].any()
+    # the "user" table's 9.0 rows never leak into the ads corpus
+    assert not (corpus == 9.0).any()
+
+
+def test_index_rejects_live_view(setup):
+    cluster, client, pub, keys, rows = setup
+    live = client.serving_view()  # LiveClusterView: no immutable version
+    with pytest.raises(TypeError):
+        RetrievalEngine(live, "ads")
+
+
+# -------------------------------------------------------- engine semantics
+
+
+def test_search_matches_oracle_on_snapshot(setup):
+    cluster, client, pub, keys, rows = setup
+    retr = _engine(client, pub)
+    rng = np.random.default_rng(8)
+    q = _dyadic(rng, (5, DIM))
+    res = retr.search(q, 10)
+    want_v, want_i = kref.topk_mips_ref(q, rows, 10)
+    np.testing.assert_array_equal(res.scores, np.asarray(want_v))
+    np.testing.assert_array_equal(res.indices, np.asarray(want_i))
+    # ascending-key corpus order makes index == key here
+    np.testing.assert_array_equal(res.ad_keys[res.valid],
+                                  res.indices[res.valid].astype(np.uint64))
+    assert res.valid.all() and res.version == 1
+    assert retr.counters["retrieval_searches"] == 1
+    assert retr.counters["retrieval_rows_scored"] == 5 * N_ADS
+
+
+def test_search_shape_contract_and_validation(setup):
+    cluster, client, pub, keys, rows = setup
+    retr = _engine(client, pub)
+    empty = retr.search(np.zeros((0, DIM), np.float32), 7)
+    assert empty.scores.shape == (0, 7) and empty.indices.shape == (0, 7)
+    with pytest.raises(ValueError):
+        retr.search(np.zeros((2, DIM + 1), np.float32), 5)  # wrong emb dim
+    with pytest.raises(ValueError):
+        retr.search(np.zeros((2, DIM), np.float32), 0)  # k < 1
+    retr.close()
+    with pytest.raises(RuntimeError):
+        retr.search(np.zeros((2, DIM), np.float32), 5)
+
+
+def test_roll_forward_atomic_under_concurrent_search(setup):
+    """Acceptance: every in-flight search during a roll matches the oracle
+    of the single version it reports — never a mix of two corpora."""
+    cluster, client, pub, keys, rows = setup
+    ads = client.registry.get("ads")
+    rows2 = rows * 2.0  # still dyadic; every score differs from v1's
+    full2 = np.zeros((N_ADS, 2 * DIM), np.float32)
+    full2[:, :DIM] = rows2
+    retr = _engine(client, pub)
+    assert retr.version == 1
+
+    rng = np.random.default_rng(9)
+    q = _dyadic(rng, (4, DIM))
+    oracle = {}
+    for v, r in ((1, rows), (2, rows2)):
+        wv, wi = kref.topk_mips_ref(q, r, 6)
+        oracle[v] = (np.asarray(wv), np.asarray(wi))
+
+    stop = threading.Event()
+    bad: list[str] = []
+    done: list[int] = []
+
+    def worker():
+        n = 0
+        try:
+            while not stop.is_set():
+                res = retr.search(q, 6)
+                wv, wi = oracle[res.version]
+                if not (np.array_equal(res.scores, wv)
+                        and np.array_equal(res.indices, wi)):
+                    bad.append(f"version {res.version} result != its oracle")
+                    stop.set()
+                n += 1
+        except BaseException as e:  # a crash must fail the test, not pass it
+            bad.append(f"worker raised: {e!r}")
+            stop.set()
+        finally:
+            done.append(n)
+
+    threads = [threading.Thread(target=worker) for _ in range(3)]
+    for t in threads:
+        t.start()
+    cluster.push(ads.namespace(keys), full2, unpin=False)
+    v2 = pub.publish()
+    after = retr.roll_forward()
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not bad, bad[0]
+    assert sum(done) > 0, "workers never completed a search"
+    assert after == v2 == 2 and retr.version == 2
+    assert retr.counters["retrieval_rolls"] == 1
+    # post-roll searches score the new corpus
+    res = retr.search(q, 6)
+    np.testing.assert_array_equal(res.scores, oracle[2][0])
+    # rolling to the version already bound is a no-op
+    assert retr.roll_forward() == 2 and retr.counters["retrieval_rolls"] == 1
+    assert retr.counters["retrieval_index_builds"] == 2
+
+
+def test_retention_refs_survive_compaction_until_close(setup):
+    """The engine's own refs (not the publisher's) keep the bound version's
+    files readable across training-side compaction: version-pinned rerank
+    lookups go to disk through the pinned view."""
+    cluster, client, pub, keys, rows = setup
+    retr = _engine(client, pub, retain_cluster=cluster)
+    rng = np.random.default_rng(10)
+    q = _dyadic(rng, (3, DIM))
+    res = retr.search(q, 5)
+    pub.release(1)  # drop the publisher's refs; the engine's remain
+    for n in cluster.nodes:
+        n.ssd.compact(force=True)
+    uk = rng.integers(0, N_ADS, size=(3, 4)).astype(np.uint64)
+    so = np.zeros((3, 4), np.int32)
+    rr = retr.rerank(res, uk, so, np.ones((3, 4), bool), n_slots=2)
+    assert rr.valid.all()  # v1 files still readable through the pinned view
+    retr.close()
+    for n in cluster.nodes:
+        n.ssd.compact(force=True)
+    assert sum(n.ssd.n_retained_orphans for n in cluster.nodes) == 0
+
+
+def test_rerank_matches_manual_rescoring(setup):
+    cluster, client, pub, keys, rows = setup
+    retr = _engine(client, pub)
+    rng = np.random.default_rng(11)
+    q = _dyadic(rng, (5, DIM))
+    res = retr.search(q, 10)
+    uk = rng.integers(0, N_ADS, size=(5, 6)).astype(np.uint64)
+    so = rng.integers(0, 4, size=(5, 6)).astype(np.int32)
+    va = rng.random((5, 6)) < 0.8
+    rr = retr.rerank(res, uk, so, va, n_slots=4)
+    user_vec = np.einsum("bn,bnd->bd", va.astype(np.float32), rows[uk])
+    inter = np.einsum("qd,qkd->qk", user_vec, rows[res.indices])
+    final = res.scores + inter
+    for b in range(5):
+        order = np.lexsort((res.indices[b], -final[b]))
+        np.testing.assert_allclose(rr.scores[b], final[b][order], rtol=1e-6)
+        np.testing.assert_array_equal(rr.indices[b], res.indices[b][order])
+    assert rr.version == res.version
+    assert retr.counters["retrieval_reranks"] == 1
+
+
+def test_lookup_at_pins_version_across_roll(setup):
+    cluster, client, pub, keys, rows = setup
+    eng = client.serving_view(snapshots=pub, cache_rows=1024)
+    v1_view = eng.source.acquire()
+    ads = client.registry.get("ads")
+    full2 = np.zeros((N_ADS, 2 * DIM), np.float32)
+    full2[:, :DIM] = rows * 3.0
+    cluster.push(ads.namespace(keys), full2, unpin=False)
+    pub.publish()
+    eng.roll_forward()
+    # latest view serves v2 rows; the pinned view still serves v1's
+    np.testing.assert_array_equal(eng.lookup("ads", keys[:8]), rows[:8] * 3.0)
+    np.testing.assert_array_equal(
+        eng.lookup_at("ads", keys[:8], view=v1_view), rows[:8]
+    )
+
+
+def test_retrieval_counters_registered():
+    for name in RETRIEVAL_COUNTER_NAMES:
+        assert name in KNOWN_COUNTERS
+    c = Counters(strict=True)
+    c.inc("retrieval_searches")  # strict mode accepts registered names
+    assert c["retrieval_searches"] == 1
