@@ -156,6 +156,64 @@ def run_model(tag: str, cfg: CTRConfig, tmp: str, n_batches: int, storage: bool)
     return result
 
 
+def run_wire(tmp: str, n_batches: int) -> dict:
+    """Training-wire section (DESIGN.md §13): quantized push bytes vs raw,
+    per-conflict-class pull savings, and the lossy run's loss delta vs the
+    exact run on the same stream."""
+    cfg = SCALED["A"]
+    working_bound = min(cfg.n_sparse_keys, cfg.batch_size * cfg.nnz_per_example)
+
+    def cluster(sub):
+        return Cluster(2, f"{tmp}/wire_{sub}", dim=cfg.emb_dim * 2,
+                       cache_capacity=2 * working_bound, file_capacity=4096,
+                       init_cols=cfg.emb_dim)
+
+    def stream():
+        return SyntheticCTRStream(cfg.n_sparse_keys, cfg.nnz_per_example,
+                                  cfg.n_slots, cfg.batch_size, seed=3)
+
+    tr_exact = CTRTrainer(cfg, cluster("exact"), TrainerConfig())
+    exact_losses = [r["loss"] for r in tr_exact.run(stream(), n_batches)]
+    tr_q = CTRTrainer(
+        cfg, cluster("quant"),
+        TrainerConfig(wire_quantize_train=True, wire_dedup_window=4),
+    )
+    lossy_losses = [r["loss"] for r in tr_q.run(stream(), n_batches)]
+
+    wc = tr_q.client.wire_counters()
+    net = tr_q.cluster.network
+    push_ratio = wc["wire_push_raw_bytes"] / max(1, wc["wire_push_enc_bytes"])
+    loss_delta = abs(exact_losses[-1] - lossy_losses[-1])
+    emit(
+        "table4.wire.push_ratio",
+        push_ratio,
+        f"raw={wc['wire_push_raw_bytes']};enc={wc['wire_push_enc_bytes']}"
+        f";nic_saved={net.push_bytes_saved}",
+    )
+    emit(
+        "table4.wire.loss_delta",
+        loss_delta,
+        f"exact={exact_losses[-1]:.6f};lossy={lossy_losses[-1]:.6f}",
+    )
+    return {
+        "n_batches": n_batches,
+        "push_rows": wc["wire_push_rows"],
+        "push_raw_bytes": wc["wire_push_raw_bytes"],
+        "push_enc_bytes": wc["wire_push_enc_bytes"],
+        "push_compression_ratio": push_ratio,
+        "nic_push_bytes_saved": net.push_bytes_saved,
+        "pull_fresh_rows": wc["wire_pull_fresh_rows"],
+        "pull_fresh_bytes": wc["wire_pull_fresh_bytes"],
+        "pull_device_rows": wc["wire_pull_device_rows"],
+        "pull_device_bytes_saved": wc["wire_pull_device_bytes_saved"],
+        "pull_forwarded_rows": wc["wire_pull_forwarded_rows"],
+        "pull_forwarded_bytes_saved": wc["wire_pull_forwarded_bytes_saved"],
+        "pull_dedup_rows": wc["wire_pull_dedup_rows"],
+        "pull_dedup_bytes_saved": wc["wire_pull_dedup_bytes_saved"],
+        "loss_delta_vs_exact": loss_delta,
+    }
+
+
 def main() -> None:
     import tempfile
 
@@ -169,6 +227,7 @@ def main() -> None:
         models = ["A"] if QUICK else ["A", "B", "C"]
         for tag in models:
             results[tag] = run_model(tag, SCALED[tag], tmp, n, storage=False)
+        results["wire"] = run_wire(tmp, n)
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
         f.write("\n")

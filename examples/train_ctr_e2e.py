@@ -58,6 +58,10 @@ def main():
     ap.add_argument("--host-feeder", action="store_true",
                     help="classic host numpy feeder instead of the "
                     "streaming ingest pipeline (same batches bitwise)")
+    ap.add_argument("--wire-quantize-train", action="store_true",
+                    help="int8 quantized gradient push with error feedback "
+                    "+ repeat-key pull dedup (DESIGN.md §13); prints the "
+                    "per-conflict-class bytes-on-wire report")
     args = ap.parse_args()
 
     cfg = CTRConfig(
@@ -82,8 +86,12 @@ def main():
     tr = CTRTrainer(
         cfg, cluster,
         TrainerConfig(checkpoint_every=50, checkpoint_dir=tmp + "/ckpt",
-                      ingest=not args.host_feeder),
+                      ingest=not args.host_feeder,
+                      wire_quantize_train=args.wire_quantize_train,
+                      wire_dedup_window=4 if args.wire_quantize_train else 0),
     )
+    if args.wire_quantize_train:
+        print("wire: int8 quantized push + error feedback, dedup window 4")
     stream = SyntheticCTRStream(
         cfg.n_sparse_keys, cfg.nnz_per_example, cfg.n_slots, cfg.batch_size,
         seed=0, zipf_a=1.05, noise=0.5,
@@ -122,6 +130,22 @@ def main():
               f"({c.get('staging_bytes', 0)/2**20:.0f} MiB through the ring), "
               f"slot wait {c.get('ingest_wait_us', 0)/1e6:.2f}s, "
               f"overlap {c.get('ingest_overlap_us', 0)/1e6:.2f}s")
+    if args.wire_quantize_train:
+        wc = tr.client.wire_counters()
+        ratio = wc["wire_push_raw_bytes"] / max(1, wc["wire_push_enc_bytes"])
+        print(f"wire push: {wc['wire_push_rows']:,} rows, "
+              f"{wc['wire_push_raw_bytes']/2**20:.1f} MiB raw -> "
+              f"{wc['wire_push_enc_bytes']/2**20:.1f} MiB encoded "
+              f"({ratio:.2f}x); NIC saved {cluster.network.push_bytes_saved/2**20:.1f} MiB")
+        print("wire pull bytes saved by conflict class: "
+              f"device-served {wc['wire_pull_device_bytes_saved']/2**20:.1f} MiB "
+              f"({wc['wire_pull_device_rows']:,} rows), "
+              f"forwarded {wc['wire_pull_forwarded_bytes_saved']/2**20:.1f} MiB "
+              f"({wc['wire_pull_forwarded_rows']:,} rows), "
+              f"dedup {wc['wire_pull_dedup_bytes_saved']/2**20:.1f} MiB "
+              f"({wc['wire_pull_dedup_rows']:,} rows); fresh pulls "
+              f"{wc['wire_pull_fresh_bytes']/2**20:.1f} MiB "
+              f"({wc['wire_pull_fresh_rows']:,} rows)")
     hits = sum(n.mem.stats.hits for n in cluster.nodes)
     misses = sum(n.mem.stats.misses for n in cluster.nodes)
     live = sum(n.ssd.n_live_rows for n in cluster.nodes)

@@ -42,10 +42,12 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.compression import WireConfig
 from repro.core.hier_ps import HierarchicalPS, WorkingSet
 from repro.core.node import Cluster
 from repro.core.pipeline import DependencyRegistry
 from repro.core.tables import RowSchema, TableRegistry, TableSpec
+from repro.metrics import Counters
 
 
 class SessionStateError(RuntimeError):
@@ -196,9 +198,13 @@ class PSClient:
         cluster: Cluster,
         tables: "list[TableSpec | tuple[str, RowSchema]] | None" = None,
         deps: DependencyRegistry | None = None,
+        wire: WireConfig | None = None,
     ):
         self.cluster = cluster
         self.deps = deps or DependencyRegistry()
+        # the training-wire config (quantized push + dedup window, DESIGN.md
+        # §13) applies uniformly to every table engine this client builds
+        self.wire = wire or WireConfig()
         registry = cluster.tables if cluster.tables is not None else TableRegistry()
         for t in tables or []:
             spec = t if isinstance(t, TableSpec) else TableSpec(name=t[0], schema=t[1])
@@ -208,7 +214,9 @@ class PSClient:
             cluster.register_tables(registry)
         self._engines: dict[str, HierarchicalPS] = {}
         for spec in registry:
-            self._engines[spec.name] = HierarchicalPS(cluster, deps=self.deps, spec=spec)
+            self._engines[spec.name] = HierarchicalPS(
+                cluster, deps=self.deps, spec=spec, wire=self.wire
+            )
 
     # ------------------------------------------------------------- tables
     def create_table(
@@ -225,7 +233,9 @@ class PSClient:
             TableSpec(name, schema, table_id=table_id, init_scale=init_scale)
         )
         self.cluster.register_tables(self.registry)
-        self._engines[spec.name] = HierarchicalPS(self.cluster, deps=self.deps, spec=spec)
+        self._engines[spec.name] = HierarchicalPS(
+            self.cluster, deps=self.deps, spec=spec, wire=self.wire
+        )
         return spec
 
     @property
@@ -241,6 +251,31 @@ class PSClient:
 
     def stats(self, name: str):
         return self._engines[name].stats
+
+    # --------------------------------------------------------- training wire
+    def wire_counters(self) -> dict:
+        """Per-class bytes-on-wire counters summed across every table."""
+        acc = Counters()
+        for e in self._engines.values():
+            acc.add_from(e.wire_counters)
+        return acc.snapshot()
+
+    def wire_state(self) -> dict:
+        """Checkpointable error-feedback residual state, keyed by table
+        name (tables with the lossy wire off are omitted)."""
+        out = {}
+        for name, e in self._engines.items():
+            st = e.wire_state()
+            if st is not None:
+                out[name] = st
+        return out
+
+    def load_wire_state(self, state: dict) -> None:
+        """Restore per-table error-feedback residuals saved by
+        :meth:`wire_state` (unknown tables are ignored)."""
+        for name, st in (state or {}).items():
+            if name in self._engines:
+                self._engines[name].load_wire_state(st)
 
     # ------------------------------------------------------------ sessions
     def session(

@@ -56,10 +56,30 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.compression import (
+    KeyedRowStore,
+    WireConfig,
+    encode_push,
+    raw_push_row_bytes,
+)
 from repro.core.keys import member_sorted
 from repro.core.node import Cluster
 from repro.core.pipeline import DependencyRegistry
 from repro.core.tables import RowSchema, TableSpec
+from repro.metrics import Counters
+
+# training-wire byte accounting (DESIGN.md §13), one Counters set per engine.
+# Push direction: raw key+f32 bytes the exact wire would move vs the encoded
+# packet bytes actually metered. Pull direction: per-conflict-class rows and
+# the row bytes each class kept off the wire.
+WIRE_COUNTER_NAMES = (
+    "wire_push_rows", "wire_push_raw_bytes", "wire_push_enc_bytes",
+    "wire_push_nonfinite_rows",
+    "wire_pull_fresh_rows", "wire_pull_fresh_bytes",
+    "wire_pull_device_rows", "wire_pull_device_bytes_saved",
+    "wire_pull_forwarded_rows", "wire_pull_forwarded_bytes_saved",
+    "wire_pull_dedup_rows", "wire_pull_dedup_bytes_saved",
+)
 
 
 @dataclass
@@ -85,7 +105,8 @@ class PSStats:
     rows_pulled: int = 0  # fresh rows actually pulled from the cluster
     rows_forwarded: int = 0  # conflict rows served by host version forwarding
     rows_device_served: int = 0  # conflict rows served by the HBM-PS copy
-    pull_bytes_saved: int = 0  # row bytes NOT pulled thanks to both paths
+    rows_dedup_served: int = 0  # repeat-key pulls served by the push window
+    pull_bytes_saved: int = 0  # row bytes NOT pulled thanks to all paths
     dedup_reuses: int = 0  # prepare_batch calls answered by the registry
     deferred_pushes: int = 0  # pushes applied off the train stage
 
@@ -106,6 +127,8 @@ class _InFlight:
     new_params: np.ndarray | None = None  # trained results (finish_batch)
     new_opt: np.ndarray | None = None
     trained: bool = False
+    device_mask: np.ndarray | None = None  # rows served by the HBM-PS copy
+    packet: object | None = None  # encoded PushPacket (wire metering)
 
 
 class HierarchicalPS:
@@ -127,6 +150,7 @@ class HierarchicalPS:
         opt_dim: int = 0,
         deps: DependencyRegistry | None = None,
         spec: TableSpec | None = None,
+        wire: WireConfig | None = None,
     ):
         self.cluster = cluster
         if spec is None:
@@ -169,6 +193,26 @@ class HierarchicalPS:
         # rows never reached the device would train zeros.
         self._last_prepared_keys: np.ndarray | None = None
         self._last_prepared_seq: int = -1
+        # ---- training wire (DESIGN.md §13) ----------------------------
+        self.wire = wire or WireConfig()
+        self.wire_counters = Counters(*WIRE_COUNTER_NAMES)
+        # per-key quantization residual, carried into the key's next push
+        # (unbounded: a residual is at most one quantization step per field)
+        self._ef = KeyedRowStore(self.width) if self.wire.quantize_push else None
+        # rows pushed within the coalescing window: delta base for
+        # device-served rows (window 1 suffices — the base is always the
+        # immediately-previous batch) and the dedup source for repeat-key
+        # pulls. Written at deposit time under ``_lock``.
+        cache_window = max(
+            1 if self.wire.quantize_push else 0, self.wire.dedup_window
+        )
+        self._pushed = (
+            KeyedRowStore(self.width, window=cache_window) if cache_window else None
+        )
+        # degraded SSD heals re-initialize rows behind our back; the cached
+        # copies then no longer match the cluster, so drop them wholesale
+        fc = cluster.fault_counters
+        self._heal_seen = fc["ssd_rows_reinit"] + fc["ssd_heal_degraded"]
 
     # ------------------------------------------------------------- tokens
     def _trained_token(self, seq: int):
@@ -262,6 +306,21 @@ class HierarchicalPS:
             else:
                 device_served = np.zeros(n, dtype=bool)
             fresh = (holder_seq < 0) & ~device_served
+            # pull dedup (DESIGN.md §13): a fresh key whose push landed
+            # within the coalescing window is served from the retained copy
+            # — bitwise what the cluster holds (single writer per table, and
+            # no-holder means the writing batch's push already applied) —
+            # for the cost of a pin message instead of a row transfer
+            dedup = np.zeros(n, dtype=bool)
+            dedup_rows = None
+            if self._pushed is not None and self.wire.dedup_window > 0:
+                self._check_heal_coherence()
+                with self._lock:
+                    if len(self._pushed):
+                        dedup = fresh & self._pushed.contains(uniq)
+                        if dedup.any():
+                            dedup_rows, _ = self._pushed.get(uniq[dedup])
+                        fresh = fresh & ~dedup
             n_fresh = int(fresh.sum())
             if n_fresh == n:
                 # conflict-free (every serial batch after its predecessor's
@@ -271,6 +330,8 @@ class HierarchicalPS:
                 pinned_fresh = uniq[fresh]
             else:
                 rows = np.zeros((n, self.cluster.dim), dtype=np.float32)
+                if dedup_rows is not None:
+                    rows[dedup, : self.width] = dedup_rows
                 if n_fresh:
                     # the overlap win: fresh rows pull while predecessors train
                     rows[fresh] = self.cluster.pull(
@@ -284,7 +345,10 @@ class HierarchicalPS:
                 slots=inverse.astype(np.int32).reshape(np.shape(batch_keys)),
                 batch_id=seq,
             )
-            entry = _InFlight(seq=seq, ws=ws, requester=requester, ext_id=batch_id)
+            entry = _InFlight(
+                seq=seq, ws=ws, requester=requester, ext_id=batch_id,
+                device_mask=device_served if device_served.any() else None,
+            )
             if pinned_fresh is not None:
                 entry.pinned.append(pinned_fresh)
         except BaseException:
@@ -302,7 +366,26 @@ class HierarchicalPS:
                 self._ext_to_seq[batch_id] = seq
         self.stats.batches_prepared += 1
         self.stats.rows_pulled += n_fresh
+        row_bytes = self.cluster.dim * 4
+        if n_fresh:
+            self.wire_counters.inc("wire_pull_fresh_rows", n_fresh)
+            self.wire_counters.inc("wire_pull_fresh_bytes", n_fresh * row_bytes)
 
+        n_dd = int(dedup.sum())
+        if n_dd:
+            try:
+                # the dedup-served rows still need eviction pins for the
+                # batch's lifetime; the pin message is all that hits the wire
+                dd_keys = uniq[dedup]
+                self.cluster.pin(dd_keys, requester=requester)
+                entry.pinned.append(dd_keys)
+            except BaseException:
+                self._forget(entry, unpin=True)
+                raise
+            self.stats.rows_dedup_served += n_dd
+            self.stats.pull_bytes_saved += n_dd * row_bytes
+            self.wire_counters.inc("wire_pull_dedup_rows", n_dd)
+            self.wire_counters.inc("wire_pull_dedup_bytes_saved", n_dd * row_bytes)
         n_dev = int(device_served.sum())
         if n_dev:
             try:
@@ -315,8 +398,10 @@ class HierarchicalPS:
                 self._forget(entry, unpin=True)
                 raise
             self.stats.rows_device_served += n_dev
-            self.stats.pull_bytes_saved += n_dev * self.cluster.dim * 4
-        if n_fresh + n_dev < n:
+            self.stats.pull_bytes_saved += n_dev * row_bytes
+            self.wire_counters.inc("wire_pull_device_rows", n_dev)
+            self.wire_counters.inc("wire_pull_device_bytes_saved", n_dev * row_bytes)
+        if n_fresh + n_dd + n_dev < n:
             holder_seq = np.where(device_served, -1, holder_seq)
             try:
                 self._resolve_conflicts(entry, uniq, holder_seq, holder_pos, entries)
@@ -393,6 +478,10 @@ class HierarchicalPS:
                         ws.opt_state[unheld] = pulled[:, self.emb_dim : self.width]
                     entry.pinned.append(uniq[unheld])
                     self.stats.rows_pulled += len(unheld)
+                    self.wire_counters.inc("wire_pull_fresh_rows", len(unheld))
+                    self.wire_counters.inc(
+                        "wire_pull_fresh_bytes", len(unheld) * self.cluster.dim * 4
+                    )
                 continue
             ws.params[idx] = src.new_params[pos]
             if self.opt_dim:
@@ -406,6 +495,10 @@ class HierarchicalPS:
             n_fwd = len(idx)
             self.stats.rows_forwarded += n_fwd
             self.stats.pull_bytes_saved += n_fwd * self.cluster.dim * 4
+            self.wire_counters.inc("wire_pull_forwarded_rows", n_fwd)
+            self.wire_counters.inc(
+                "wire_pull_forwarded_bytes_saved", n_fwd * self.cluster.dim * 4
+            )
 
     # ----------------------------------------------------------- push side
     def finish_batch(
@@ -418,17 +511,126 @@ class HierarchicalPS:
 
         The actual push is deferred to the pull/push stage thread (the next
         ``prepare_batch`` / ``apply_ready_pushes`` / ``drain`` call), and the
-        results become the forwarding source for conflicting successors."""
+        results become the forwarding source for conflicting successors.
+
+        With the training wire on (``wire.quantize_push``) the quantize →
+        dequantize round trip happens HERE, at deposit time: the entry then
+        holds the *applied* (dequantized) rows, so version forwarding, the
+        deferred push, the redo log and recovery replay all see bitwise the
+        rows the wire's receiver reconstructs — lossy serial and lossy
+        pipelined runs stay bitwise equal (modulo device-resident reuse,
+        which keeps pre-quantization rows on device by design)."""
         with self._lock:
             entry = self._inflight.get(ws.batch_id)
             if entry is None:
                 raise KeyError(f"batch {ws.batch_id} is not in flight")
-            entry.new_params = np.asarray(new_params, dtype=np.float32)
-            entry.new_opt = (
+            new_params = np.asarray(new_params, dtype=np.float32)
+            new_opt = (
                 None if new_opt_state is None else np.asarray(new_opt_state, dtype=np.float32)
             )
+            if self.wire.enabled:
+                new_params, new_opt = self._encode_deposit(entry, new_params, new_opt)
+            entry.new_params = new_params
+            entry.new_opt = new_opt
             entry.trained = True
         self.deps.signal(self._trained_token(ws.batch_id))
+
+    def _encode_deposit(
+        self,
+        entry: _InFlight,
+        new_params: np.ndarray,
+        new_opt: np.ndarray | None,
+    ) -> tuple[np.ndarray, np.ndarray | None]:
+        """Wire-side processing of one deposit (called under ``_lock``).
+
+        Quantizes the push as a delta against each row's base — the batch's
+        starting rows, which by push ordering are exactly what the receiver
+        holds when this push applies; device-served rows (zero in the
+        working set) take their base from the pushed-row window instead,
+        falling back to absolute encoding on a cache miss. Stores the
+        error-feedback residual per key, retains the applied rows in the
+        pushed-row window, and returns the applied (dequantized) rows."""
+        ws = entry.ws
+        n = ws.n_working
+        if self.opt_dim:
+            opt_src = new_opt if new_opt is not None else ws.opt_state
+            new_rows = np.concatenate(
+                [new_params, np.asarray(opt_src, dtype=np.float32)], axis=1
+            )
+        else:
+            new_rows = new_params
+        if self.wire.quantize_push:
+            base = (
+                np.concatenate([ws.params, ws.opt_state], axis=1)
+                if self.opt_dim
+                else np.array(ws.params, dtype=np.float32)
+            )
+            has_base = np.ones(n, dtype=bool)
+            if entry.device_mask is not None:
+                m = entry.device_mask
+                cached, found = (
+                    self._pushed.get(ws.keys[m])
+                    if self._pushed is not None
+                    else (np.zeros((int(m.sum()), self.width), np.float32),
+                          np.zeros(int(m.sum()), bool))
+                )
+                base[m] = cached
+                has_base[m] = found
+            residual, _ = self._ef.get(ws.keys)
+            pkt, applied, new_res, n_bad = encode_push(
+                new_rows, base, residual, self.emb_dim,
+                has_base=has_base, nonfinite=self.wire.nonfinite,
+            )
+            self._ef.put(ws.keys, new_res, seq=entry.seq)
+            entry.packet = pkt
+            self.wire_counters.inc("wire_push_rows", n)
+            self.wire_counters.inc(
+                "wire_push_raw_bytes", n * raw_push_row_bytes(self.cluster.dim)
+            )
+            self.wire_counters.inc("wire_push_enc_bytes", pkt.nbytes)
+            if n_bad:
+                self.wire_counters.inc("wire_push_nonfinite_rows", n_bad)
+            new_rows = applied
+        if self._pushed is not None:
+            self._pushed.put(ws.keys, new_rows, seq=entry.seq)
+        if self.opt_dim:
+            return new_rows[:, : self.emb_dim], new_rows[:, self.emb_dim :]
+        return new_rows, new_opt
+
+    def _check_heal_coherence(self) -> None:
+        """Drop the pushed-row window if any degraded SSD heal happened
+        since we last looked: re-initialized rows no longer match the
+        retained copies, so neither dedup nor delta bases may use them."""
+        fc = self.cluster.fault_counters
+        h = fc["ssd_rows_reinit"] + fc["ssd_heal_degraded"]
+        if h != self._heal_seen:
+            self._heal_seen = h
+            with self._lock:
+                if self._pushed is not None:
+                    self._pushed.clear()
+
+    # ------------------------------------------------- wire state lifecycle
+    def wire_state(self) -> "dict[str, np.ndarray] | None":
+        """Checkpointable error-feedback state (``None`` when the lossy
+        wire is off). The pushed-row window is deliberately NOT part of it:
+        it re-warms from live traffic and must not survive a restore onto a
+        cluster whose rows it never observed."""
+        if self._ef is None:
+            return None
+        with self._lock:
+            st = self._ef.state()
+        return {"keys": st["keys"], "rows": st["rows"]}
+
+    def load_wire_state(self, state: "dict[str, np.ndarray]") -> None:
+        if self._ef is None:
+            return
+        with self._lock:
+            self._ef.clear()
+            keys = np.asarray(state["keys"], dtype=np.uint64)
+            if len(keys):
+                self._ef.put(keys, np.asarray(state["rows"], dtype=np.float32))
+            if self._pushed is not None:
+                self._pushed.clear()
 
     def apply_ready_pushes(self) -> int:
         """Apply the deferred pushes of every trained in-flight batch, oldest
@@ -462,7 +664,12 @@ class HierarchicalPS:
         rows[:, self.emb_dim : self.width] = (
             entry.new_opt if entry.new_opt is not None else ws.opt_state
         )
-        self.cluster.push(ws.keys, rows, requester=entry.requester, unpin=True)
+        # entry.packet (set at deposit when the lossy wire is on) makes the
+        # cluster meter the encoded bytes; the values pushed are the exact
+        # dequantized rows either way
+        self.cluster.push(
+            ws.keys, rows, requester=entry.requester, unpin=True, packet=entry.packet
+        )
 
     def complete_batch(
         self,
@@ -502,6 +709,10 @@ class HierarchicalPS:
                 self._ext_to_seq.clear()
                 self._last_prepared_keys = None  # residency ends with the run
                 self._last_prepared_seq = -1
+                if self._pushed is not None and any(e.trained for e in remaining):
+                    # a trained batch whose push never landed has deposited
+                    # rows in the window that the cluster never saw
+                    self._pushed.clear()
             # pscheck PS101: one entry's unpin failing must not leak the
             # rest — attempt every release, then surface the first error
             # only if it would not mask an already-propagating exception
@@ -527,6 +738,8 @@ class HierarchicalPS:
             if ws.batch_id == self._last_prepared_seq:
                 self._last_prepared_keys = None  # its rows never trained
                 self._last_prepared_seq = -1
+            if self._pushed is not None and entry is not None and entry.trained:
+                self._pushed.clear()  # its deposited rows never landed
         # wake any prepare blocked on this batch's keys; it will see the
         # missing results and fall back to pulling the (current) cluster copy
         self.deps.signal(self._trained_token(ws.batch_id))

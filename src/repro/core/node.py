@@ -42,8 +42,11 @@ class NetworkModel:
     ``pin=False``) into the int8 row-sparse wire format of
     :mod:`repro.core.compression`; bytes-on-wire then count the encoded
     packet, and ``quantize_bytes_saved`` feeds the Fig-4b accounting.
-    Training pulls (pinned) and pushes always stay exact — quantizing them
-    would break the bitwise lossless guarantee.
+    Pinned training pulls stay exact. Training *pushes* may cross encoded
+    when the engine's training wire is on (``Cluster.push(packet=...)``):
+    the values applied are the exact dequantized rows, but the NIC meters
+    the encoded packet — latency, ``bytes_moved`` and NIC_STALL faults all
+    see the bytes actually moved, and ``push_bytes_saved`` records the win.
     """
 
     latency_s: float = 5e-6
@@ -57,6 +60,8 @@ class NetworkModel:
     messages: int = 0
     quantized_messages: int = 0
     quantize_bytes_saved: int = 0  # raw f32 bytes minus encoded packet bytes
+    push_enc_messages: int = 0  # training pushes that crossed encoded
+    push_bytes_saved: int = 0  # raw push bytes minus encoded packet bytes
     stalls: int = 0  # NIC_STALL faults absorbed (DESIGN.md §9)
     stall_time: float = 0.0  # extra virtual seconds those stalls added
     faults: object = field(default=None, compare=False, repr=False)
@@ -86,9 +91,12 @@ class NetworkModel:
         cannot diverge between them."""
         if self.wire_quantize and serving:
             pkt = sparse_encode(keys, vals, quantize=True)
-            self.transfer(pkt.nbytes)
+            # the reply resends values only — the keys crossed the wire in
+            # the request message the caller already metered; charging
+            # pkt.nbytes here double-counted 8 B/row of key traffic
+            self.transfer(pkt.payload_nbytes)
             self.quantized_messages += 1
-            self.quantize_bytes_saved += max(0, vals.nbytes - pkt.nbytes)
+            self.quantize_bytes_saved += max(0, vals.nbytes - pkt.payload_nbytes)
             return sparse_decode(pkt)[1]
         self.transfer(vals.nbytes)
         return vals
@@ -100,6 +108,7 @@ class NetworkModel:
         return dataclasses.replace(
             self, virtual_time=0.0, bytes_moved=0, messages=0,
             quantized_messages=0, quantize_bytes_saved=0,
+            push_enc_messages=0, push_bytes_saved=0,
             stalls=0, stall_time=0.0,
         )
 
@@ -330,7 +339,21 @@ class Cluster:
         out[order] = sorted_out  # one scatter back into request order
         return out
 
-    def push(self, keys: np.ndarray, values: np.ndarray, requester: int = 0, unpin: bool = True) -> None:
+    def push(
+        self,
+        keys: np.ndarray,
+        values: np.ndarray,
+        requester: int = 0,
+        unpin: bool = True,
+        packet=None,
+    ) -> None:
+        """Partitioned push. ``values`` are always the exact f32 rows to
+        apply (with the training wire on, the engine already quantized and
+        *dequantized* them, so nodes, the redo log, and recovery replay all
+        see precisely the rows the receiver reconstructs). ``packet`` — a
+        :class:`repro.core.compression.PushPacket` covering these rows — is
+        metering-only: remote segments then charge the NIC the encoded
+        segment bytes instead of raw key+f32."""
         if not self._write_gate.wait(timeout=120.0):
             raise RuntimeError("cluster write gate held >120s (pause_writes leak?)")
         keys = np.asarray(keys, dtype=np.uint64)
@@ -348,7 +371,14 @@ class Cluster:
             if lo == hi:
                 continue
             if node_id != requester:
-                self.network.transfer((hi - lo) * (8 + 4 * self.dim))
+                raw = (hi - lo) * (8 + 4 * self.dim)
+                if packet is not None:
+                    enc = packet.segment_nbytes(hi - lo)
+                    self.network.transfer(enc)
+                    self.network.push_enc_messages += 1
+                    self.network.push_bytes_saved += max(0, raw - enc)
+                else:
+                    self.network.transfer(raw)
             self._with_recovery(
                 node_id,
                 lambda n=node_id, l=lo, h=hi: self.nodes[n].push(

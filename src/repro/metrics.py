@@ -26,6 +26,17 @@ KNOWN_COUNTERS = frozenset({
     "node_recoveries", "rows_replayed",
     # NIC wire quantization (core/node.py NetworkModel via add_from)
     "quantized_messages", "quantize_bytes_saved",
+    # training wire (core/hier_ps.py WIRE_COUNTER_NAMES): push direction is
+    # raw-vs-encoded bytes for the quantized gradient push; pull direction is
+    # per-conflict-class rows and bytes saved (device-served rows ship no
+    # bytes, forwarded rows ride the pin transfer, dedup rows collapse a
+    # repeat pull inside the coalescing window to a pin message)
+    "wire_push_rows", "wire_push_raw_bytes", "wire_push_enc_bytes",
+    "wire_push_nonfinite_rows",
+    "wire_pull_fresh_rows", "wire_pull_fresh_bytes",
+    "wire_pull_device_rows", "wire_pull_device_bytes_saved",
+    "wire_pull_forwarded_rows", "wire_pull_forwarded_bytes_saved",
+    "wire_pull_dedup_rows", "wire_pull_dedup_bytes_saved",
     # streaming ingestion (ingest/staging.py + ingest/extract.py); times
     # are integer microseconds (counters are int-only)
     "ingest_batches", "ingest_examples", "staging_bytes",

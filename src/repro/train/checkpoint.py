@@ -99,6 +99,30 @@ def latest_step(directory: str) -> int | None:
     return int(name.split("_")[1])
 
 
+def restore_extra_arrays(directory: str, prefix: str, step: int | None = None) -> dict:
+    """Load the array leaves saved under ``prefix`` as a nested dict —
+    for checkpoint subtrees whose shape varies between saves (e.g. the
+    training wire's per-key error-feedback state, DESIGN.md §13) and so
+    cannot ride the fixed ``restore`` template. Returns ``{}`` when the
+    checkpoint predates the subtree, keeping old checkpoints restorable."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    out: dict = {}
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        for k in z.files:
+            if not k.startswith(prefix):
+                continue
+            parts = k[len(prefix):].strip("/").split("/")
+            d = out
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = z[k]
+    return out
+
+
 def restore(directory: str, template, step: int | None = None):
     """Returns (tree, step, extra, ps_manifest|None)."""
     if step is None:

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.configs.ctr_models import CTRConfig, table_specs
 from repro.core.client import PSClient
+from repro.core.compression import WireConfig
 from repro.core.hbm_ps import DeviceWorkingSet
 from repro.core.node import Cluster, NodeDownError
 from repro.core.pipeline import Pipeline, Stage
@@ -81,6 +82,15 @@ class TrainerConfig:
     # device; False = classic host feeder (stream yields CTRBatch)
     ingest: bool = False
     staging_depth: int = 2  # ring slots (2 = the paper-style pinned pair)
+    # training wire (DESIGN.md §13): wire_quantize_train turns on the int8
+    # delta push with per-key error feedback — LOSSY (final loss tracks the
+    # exact run within the bounded-loss harness's tolerance, but bitwise
+    # serial parity no longer holds); the error-feedback residual rides
+    # checkpoints under the "wire_ef" subtree. wire_dedup_window > 0
+    # additionally serves repeat-key pulls from the pushed-row window
+    # (lossless, works with the exact wire too)
+    wire_quantize_train: bool = False
+    wire_dedup_window: int = 0
 
 
 class CTRTrainer:
@@ -98,7 +108,11 @@ class CTRTrainer:
             "CTRTrainer pipelines a single table; use make_ctr_train_step_grouped "
             "with per-group sessions for heterogeneous slot_groups"
         )
-        self.client = PSClient(cluster, table_specs(cfg))
+        self.wire = WireConfig(
+            quantize_push=tcfg.wire_quantize_train,
+            dedup_window=tcfg.wire_dedup_window,
+        )
+        self.client = PSClient(cluster, table_specs(cfg), wire=self.wire)
         self.table = cfg.groups[0].name
         self.ps = self.client.engine(self.table)  # per-table engine (stats, tests)
         self.dev_ws = DeviceWorkingSet(row_bytes=2 * cfg.emb_dim * 4)
@@ -236,9 +250,16 @@ class CTRTrainer:
             # cut: all batches up to and including this one. The manifest
             # records the hosted table specs alongside the SSD file map.
             self.client.apply_ready_pushes()
+            tree = {"tower": self.tower, "opt": self.opt_state}
+            wire_ef = self.client.wire_state()
+            if wire_ef:
+                # the lossy wire's per-key quantization residuals are model
+                # state: resuming without them re-applies error the next
+                # pushes already carried
+                tree["wire_ef"] = wire_ef
             self.ckpt.save(
                 self.batches_done,
-                {"tower": self.tower, "opt": self.opt_state},
+                tree,
                 extra={"losses": self.losses[-16:]},
                 ps_manifest=self.client.manifest(),
             )
@@ -432,11 +453,17 @@ class CTRTrainer:
             self.cluster = Cluster.restore(ps_manifest, self.cluster.base_dir, **kw)
             # re-adding the config's specs is a no-op when the manifest
             # already recorded them (and covers pre-multi-table manifests)
-            self.client = PSClient(self.cluster, table_specs(self.cfg))
+            self.client = PSClient(self.cluster, table_specs(self.cfg), wire=self.wire)
             self.ps = self.client.engine(self.table)
             if self.publisher is not None:
                 # re-take live versions' retention refs on the restored SSDs
                 self.publisher.rebind(self.cluster)
+        if self.wire.quantize_push:
+            # rebind the error-feedback residuals captured at the same cut
+            # as the manifest (absent in pre-wire checkpoints -> fresh EF)
+            self.client.load_wire_state(
+                ckpt.restore_extra_arrays(self.tcfg.checkpoint_dir, "wire_ef/", step=step)
+            )
         self.dev_ws.reset()
         self._prev_table = self._prev_accum = None
         return step
